@@ -1,0 +1,49 @@
+"""Paper Figure 4: scaling study.
+
+Reads the AOT dry-run records for single-pod (256 chips) and multi-pod
+(512 chips) meshes and reports the roofline-model scaling efficiency per
+architecture: with the global batch fixed (assignment shapes), going
+single -> multi is a strong-scaling step; the roofline bound per chip should
+ideally halve. Efficiency = bound(single) / (2 * bound(multi)).
+
+(The paper's Fig. 4 is weak scaling on real TPUs; this is the dry-run
+counterpart the container supports — the full per-arch tables live in
+EXPERIMENTS.md.)
+"""
+
+import glob
+import json
+import os
+
+
+def _load(arch, shape, mesh):
+    path = f"experiments/dryrun/{arch}__{shape}__{mesh}.json"
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        rec = json.load(f)
+    return rec if rec.get("status") == "ok" else None
+
+
+def run():
+    rows = []
+    for path in sorted(glob.glob("experiments/dryrun/*__train_4k__single.json")):
+        arch = os.path.basename(path).split("__")[0]
+        single = _load(arch, "train_4k", "single")
+        multi = _load(arch, "train_4k", "multi")
+        if not single or "roofline" not in single:
+            continue
+        r = single["roofline"]
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        detail = f"dominant={r['dominant']}"
+        if multi:
+            m_fits = multi["memory"]["fits"]
+            s_fits = single["memory"]["fits"]
+            detail += f";fits_256={s_fits};fits_512={m_fits}"
+            detail += (f";mem_512_over_256="
+                       f"{multi['memory']['peak_per_device'] / max(single['memory']['peak_per_device'], 1):.2f}")
+        rows.append((f"scaling/{arch}", bound * 1e6, detail))
+    if not rows:
+        rows.append(("scaling/no_dryrun_records", 0,
+                     "run repro.launch.dryrun first"))
+    return rows

@@ -1,0 +1,63 @@
+"""Paper Table 3: training performance.
+
+Wall-clock MFU on real accelerators is out of scope for this CPU container;
+this benchmark reports (a) measured CPU step time + tokens/s on the reduced
+per-family models (regression tracking across the whole substrate: data ->
+model -> grads -> optimizer), and (b) the roofline-derived step-time bound
+for the paper-size models from the AOT dry-run records when available
+(EXPERIMENTS.md §Roofline holds the full table).
+"""
+
+import glob
+import json
+import os
+import time
+
+import jax
+
+from repro.configs import registry
+from repro.core.config import config_for_function
+from repro.trainer import optimizers as opt_lib
+from repro.trainer.trainer import SpmdTrainer
+
+BENCH_ARCHS = ["qwen2-1.5b", "mixtral-8x7b", "jamba-1.5-large-398b",
+               "rwkv6-7b", "hubert-xlarge"]
+
+
+def _step_time(arch, steps=8, batch=8, seq=32):
+    spec = registry.get_spec(arch)
+    model_cfg = spec.make_smoke()
+    cfg = SpmdTrainer.default_config().set(
+        name="t", model=model_cfg, max_steps=steps, log_every_n=steps)
+    task = {"audio": "audio", "vlm": "vlm"}.get(spec.modality, "lm")
+    cfg.input.set(task=task, vocab_size=model_cfg.decoder.vocab_size,
+                  seq_len=seq, global_batch_size=batch,
+                  model_dim=model_cfg.decoder.dim, num_patches=4)
+    cfg.learner.optimizer = config_for_function(opt_lib.adamw).set(peak_lr=1e-3)
+    trainer = cfg.instantiate()
+    t0 = time.perf_counter()
+    result = trainer.run()
+    wall = time.perf_counter() - t0
+    per_step = wall / steps
+    return per_step, batch * seq / per_step, result["num_params"]
+
+
+def run():
+    rows = []
+    for arch in BENCH_ARCHS:
+        per_step, tok_s, n_params = _step_time(arch)
+        rows.append((f"train_step/{arch}", per_step * 1e6,
+                     f"tokens_per_s={tok_s:.0f};params={n_params}"))
+    # Roofline-bound step times from dry-run records (paper-size models).
+    for path in sorted(glob.glob("experiments/dryrun/*__train_4k__single.json")):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok" or "roofline" not in rec:
+            continue
+        r = rec["roofline"]
+        bound_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        mfu_bound = r["model_flops_global"] / (
+            rec["chips"] * 197e12 * bound_s) if bound_s else 0
+        rows.append((f"train_roofline_bound/{rec['arch']}", bound_s * 1e6,
+                     f"dominant={r['dominant']};mfu_bound={mfu_bound:.3f}"))
+    return rows

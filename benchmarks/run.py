@@ -1,0 +1,31 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  bench_loc        — Table 2 (LoC-complexity of RoPE/MoE integration)
+  bench_train      — Table 3 (training step time / roofline bounds)
+  bench_inference  — Table 4 + Fig 5 (TTFT / TPOT / throughput / cont. batching)
+  bench_scaling    — Fig 4 (single-pod vs multi-pod scaling from dry-runs)
+
+Prints ``name,us_per_call,derived`` CSV.
+"""
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import bench_inference, bench_loc, bench_scaling, bench_train
+
+    print("name,us_per_call,derived")
+    for mod in (bench_loc, bench_train, bench_inference, bench_scaling):
+        try:
+            rows = mod.run()
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            rows = [(f"{mod.__name__}/ERROR", -1, str(e)[:80])]
+        for name, us, derived in rows:
+            print(f"{name},{us:.2f},{derived}")
+            sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Hybrid-architecture example: a reduced Jamba (Mamba + attention + MoE).
+
+Shows the token-mixer drop-in property: Mamba layers sit where attention
+would, MoE sits where FFN would — the stack is *pure config*. Trains the
+reduced jamba family variant and then decodes with its O(1) recurrent state.
+
+Run: PYTHONPATH=src python examples/hybrid_jamba.py
+"""
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.core.config import config_for_function
+from repro.core.module import functional
+from repro.inference.engine import InferenceEngine
+from repro.trainer import optimizers as opt_lib
+from repro.trainer.trainer import SpmdTrainer
+
+
+def main():
+    spec = registry.get_spec("jamba-1.5-large-398b")
+    model_cfg = spec.make_smoke()  # same family: mamba+attn+MoE pattern
+    vocab = model_cfg.decoder.vocab_size
+
+    trainer_cfg = SpmdTrainer.default_config().set(
+        name="trainer", model=model_cfg, max_steps=50, log_every_n=25)
+    trainer_cfg.input.set(task="lm", vocab_size=vocab, seq_len=32,
+                          global_batch_size=8)
+    trainer_cfg.learner.optimizer = config_for_function(opt_lib.adamw).set(
+        peak_lr=3e-3)
+    trainer = trainer_cfg.instantiate()
+    result = trainer.run()
+    print(f"[jamba] hybrid params={result['num_params']:,} "
+          f"loss {result['history'][0]['loss']:.3f} -> "
+          f"{result['final']['loss']:.3f} "
+          f"(includes MoE aux={result['final']['aux_loss']:.4f})")
+
+    # Decode: mamba conv/ssm states + attention KV cache in one opaque tree.
+    params = jax.device_get(result["state"]["params"])
+    engine = InferenceEngine.default_config().set(
+        name="engine", model=model_cfg, max_len=64, slots=2).instantiate()
+    engine.load(params)
+    prompts = np.random.default_rng(0).integers(0, vocab, size=(2, 8))
+    tokens, metrics = engine.generate(prompts, max_new_tokens=8)
+    print(f"[jamba] decoded {tokens.shape} tokens, "
+          f"tpot={metrics['tpot_s']*1e3:.2f}ms")
+
+    cache = engine.init_cache(2)
+    leaves = jax.tree_util.tree_flatten_with_path(cache)[0]
+    kinds = sorted({jax.tree_util.keystr(p).split("'")[-2] for p, _ in leaves})
+    print(f"[jamba] heterogeneous decode state leaves: {kinds}")
+    print("[jamba] OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Quickstart: the paper's developer experience in ~60 lines.
+
+1. Compose a model from the layer library (hierarchical configs, §4.1).
+2. Integrate MoE into it with the famous ~10-line replace_config traversal —
+   zero changes to any layer or model code (§2.1).
+3. Swap the RoPE variant the same way.
+4. Train it with the SpmdTrainer.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax.numpy as jnp
+
+from repro.configs import common as c
+from repro.core.config import config_for_function, replace_config
+from repro.layers import FeedForward
+from repro.layers.moe import MoELayer
+from repro.layers.rope import LinearScaledRotaryEmbedding, RotaryEmbedding
+from repro.trainer import optimizers as opt_lib
+from repro.trainer.trainer import SpmdTrainer
+
+
+def main():
+    # --- 1. compose a small transformer LM entirely from configs ----------
+    attn = c.attention_cfg(num_heads=4, num_kv_heads=2, rope_theta=10000.0)
+    attn.set(impl="ref")
+    layer = c.layer_cfg(64, attn, c.ffn_cfg(128))
+    decoder = c.decoder_cfg(vocab_size=64, dim=64,
+                            stack=c.repeat_cfg(layer, 2, remat=None))
+    model = c.lm_cfg(decoder)
+
+    trainer_cfg = SpmdTrainer.default_config().set(
+        name="trainer", model=model, max_steps=60, log_every_n=20, seed=0)
+    trainer_cfg.input.set(task="lm", vocab_size=64, seq_len=32,
+                          global_batch_size=8)
+    trainer_cfg.learner.optimizer = config_for_function(opt_lib.adamw).set(
+        peak_lr=5e-3)
+
+    # --- 2. THE paper demo: drop-in MoE via config traversal --------------
+    n = replace_config(
+        trainer_cfg,
+        target=FeedForward,
+        new_cfg=MoELayer.default_config().set(num_experts=4, top_k=2),
+        propagate=("input_dim", "hidden_dim"),
+    )
+    print(f"[quickstart] replaced {n} FFN template(s) with MoE "
+          "(0 LoC changed in any layer/model)")
+
+    # --- 3. swap the RoPE variant the same way ------------------------------
+    replace_config(
+        trainer_cfg,
+        target=RotaryEmbedding,
+        new_cfg=LinearScaledRotaryEmbedding.default_config().set(
+            scaling_factor=2.0),
+        propagate=("dim", "theta"),
+    )
+
+    # --- 4. train ------------------------------------------------------------
+    trainer = trainer_cfg.instantiate()
+    result = trainer.run()
+    first, last = result["history"][0], result["history"][-1]
+    print(f"[quickstart] params={result['num_params']:,}")
+    print(f"[quickstart] loss {first['loss']:.3f} -> {last['loss']:.3f} "
+          f"(aux {last['aux_loss']:.4f})")
+    assert last["loss"] < first["loss"], "training should reduce loss"
+    print("[quickstart] OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""arctic-480b [moe] 35L d=7168 56H (GQA kv=8) d_ff=4864 vocab=32000.
+
+128 experts top-2 PLUS a dense residual FFN in parallel
+[hf:Snowflake/snowflake-arctic-base]. Composition: ResidualMoE(dense, moe)
+— each child keeps its own encapsulated config. 128 experts shard 8-per-chip
+over the 16-way model axis (expert parallelism).
+
+Note: the assignment pins d_ff=4864; we use it for both the experts and the
+dense residual branch (the hf card's dense/residual split is not re-derived
+here).
+"""
+
+from repro.configs import common as c
+from repro.layers.moe import ResidualMoE
+
+ARCH_ID = "arctic-480b"
+
+
+def _model(L, d, Hq, Hkv, hd, dff, vocab, E, remat="full"):
+    attn = c.attention_cfg(num_heads=Hq, num_kv_heads=Hkv, head_dim=hd,
+                           rope_theta=1e6)
+    ff = ResidualMoE.default_config()
+    ff.dense = c.ffn_cfg(dff)
+    ff.moe = c.moe_cfg(dff, num_experts=E, top_k=2)
+    layer = c.layer_cfg(d, attn, ff)
+    dec = c.decoder_cfg(vocab_size=vocab, dim=d,
+                        stack=c.repeat_cfg(layer, L, remat=remat),
+                        tied_embeddings=False)
+    return c.lm_cfg(dec)
+
+
+def make_model():
+    return _model(35, 7168, 56, 8, 128, 4864, 32000, E=128)
+
+
+def make_smoke():
+    return _model(2, 128, 4, 2, 32, 128, 128, E=4, remat=None)
+
+
+SPEC = c.ArchSpec(
+    arch_id=ARCH_ID, family="moe", citation="hf:Snowflake/snowflake-arctic-base",
+    make_model=make_model, make_smoke=make_smoke,
+    vocab_size=32000, model_dim=7168,
+    skip_shapes={"long_500k": "pure full-attention arch; no sub-quadratic variant configured"},
+)

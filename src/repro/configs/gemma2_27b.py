@@ -1,0 +1,53 @@
+"""gemma2-27b [dense] 46L d=4608 32H (GQA kv=16) d_ff=36864 vocab=256000.
+
+Local(4096)/global alternating attention, attn-logit softcap 50, final-logit
+softcap 30, sandwich (post) norms, GeGLU, sqrt(d)-scaled embeddings, RMSNorm
+with unit offset, query scale (d/H)^-0.5 [arXiv:2408.00118].
+
+The (local, global) pair is a heterogeneous Block scanned 23x. Local layers
+bound their decode cache at 4096 tokens, so gemma2 RUNS long_500k (global
+layers keep the full 524k cache, sharded over the data axis).
+"""
+
+from repro.configs import common as c
+from repro.layers import RMSNorm
+
+ARCH_ID = "gemma2-27b"
+WINDOW = 4096
+
+
+def _model(blocks, d, Hq, Hkv, hd, dff, vocab, remat="full"):
+    norm = RMSNorm.default_config().set(unit_offset=True)
+    q_scale = (d / Hq) ** -0.5
+
+    def attn(window):
+        return c.attention_cfg(
+            num_heads=Hq, num_kv_heads=Hkv, head_dim=hd, rope_theta=10000.0,
+            sliding_window=window, logit_softcap=50.0, query_scale=q_scale)
+
+    geglu = ("linear", "nn.gelu_tanh")
+    local = c.layer_cfg(d, attn(WINDOW), c.ffn_cfg(dff, geglu),
+                        norm=norm, post_norms=True)
+    glob = c.layer_cfg(d, attn(None), c.ffn_cfg(dff, geglu),
+                       norm=norm, post_norms=True)
+    stack = c.pattern_stack_cfg([local, glob], blocks, remat=remat)
+    dec = c.decoder_cfg(vocab_size=vocab, dim=d, stack=stack,
+                        tied_embeddings=True, logits_softcap=30.0,
+                        scale_embeddings=True,
+                        final_norm=norm.clone())
+    return c.lm_cfg(dec)
+
+
+def make_model():
+    return _model(23, 4608, 32, 16, 128, 36864, 256000)
+
+
+def make_smoke():
+    return _model(1, 128, 4, 2, 32, 256, 128, remat=None)  # 1 block = 2 layers
+
+
+SPEC = c.ArchSpec(
+    arch_id=ARCH_ID, family="dense", citation="arXiv:2408.00118",
+    make_model=make_model, make_smoke=make_smoke,
+    vocab_size=256000, model_dim=4608,
+)

@@ -1,0 +1,50 @@
+"""hubert-xlarge [audio] 48L d=1280 16H (kv=16) d_ff=5120 vocab=504.
+
+Encoder-only masked-unit prediction, same backbone as wav2vec2
+[arXiv:2106.07447].
+
+Assignment carve-out: the mel-spectrogram + conv feature extractor (and its
+conv positional embedding) is a STUB — ``input_specs`` provides frame
+embeddings (B, S, 1280). We implement the bidirectional transformer encoder
++ masked prediction head (MaskedLM).
+
+Encoder-only => no decode step: decode_32k and long_500k are skipped
+(documented in DESIGN.md); prefill_32k runs as the batched encoder forward.
+"""
+
+from repro.configs import common as c
+from repro.layers import MaskedLM
+from repro.layers.basic import LayerNorm
+
+ARCH_ID = "hubert-xlarge"
+
+
+def _model(L, d, H, dff, vocab, remat="full"):
+    attn = c.attention_cfg(num_heads=H, num_kv_heads=H, rope_theta=None,
+                           causal=False)
+    norm = LayerNorm.default_config()
+    layer = c.layer_cfg(d, attn, c.ffn_cfg(dff, activation="nn.gelu"), norm=norm)
+    dec = c.decoder_cfg(vocab_size=vocab, dim=d,
+                        stack=c.repeat_cfg(layer, L, remat=remat),
+                        tied_embeddings=False,
+                        final_norm=norm.clone())
+    return MaskedLM.default_config().set(name="model", decoder=dec, dim=d)
+
+
+def make_model():
+    return _model(48, 1280, 16, 5120, 504)
+
+
+def make_smoke():
+    return _model(2, 128, 4, 256, 64, remat=None)
+
+
+SPEC = c.ArchSpec(
+    arch_id=ARCH_ID, family="audio", citation="arXiv:2106.07447",
+    make_model=make_model, make_smoke=make_smoke,
+    vocab_size=504, model_dim=1280, modality="audio",
+    skip_shapes={
+        "decode_32k": "encoder-only architecture: no autoregressive decode step",
+        "long_500k": "encoder-only architecture: no autoregressive decode step",
+    },
+)

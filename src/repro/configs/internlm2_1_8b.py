@@ -1,0 +1,34 @@
+"""internlm2-1.8b [dense] 24L d=2048 16H (GQA kv=8) d_ff=8192 vocab=92544.
+
+GQA [arXiv:2403.17297].
+"""
+
+from repro.configs import common as c
+
+ARCH_ID = "internlm2-1.8b"
+
+
+def _model(L, d, Hq, Hkv, hd, dff, vocab, remat="full"):
+    attn = c.attention_cfg(num_heads=Hq, num_kv_heads=Hkv, head_dim=hd,
+                           rope_theta=1e6)
+    layer = c.layer_cfg(d, attn, c.ffn_cfg(dff))
+    dec = c.decoder_cfg(vocab_size=vocab, dim=d,
+                        stack=c.repeat_cfg(layer, L, remat=remat),
+                        tied_embeddings=False)
+    return c.lm_cfg(dec)
+
+
+def make_model():
+    return _model(24, 2048, 16, 8, 128, 8192, 92544)
+
+
+def make_smoke():
+    return _model(2, 128, 4, 2, 32, 256, 128, remat=None)
+
+
+SPEC = c.ArchSpec(
+    arch_id=ARCH_ID, family="dense", citation="arXiv:2403.17297",
+    make_model=make_model, make_smoke=make_smoke,
+    vocab_size=92544, model_dim=2048,
+    skip_shapes={"long_500k": "pure full-attention dense arch; no sub-quadratic variant configured"},
+)

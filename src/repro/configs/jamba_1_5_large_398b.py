@@ -1,0 +1,56 @@
+"""jamba-1.5-large-398b [hybrid] 72L d=8192 64H (GQA kv=8) d_ff=24576
+vocab=65536, MoE 16e top-2 [arXiv:2403.19887].
+
+Jamba interleave: 1 attention per 8 layers (attn at block index 4), MoE
+FFN every other layer (odd indices). The 8-layer super-block is a
+heterogeneous Block scanned 9x — the hybrid is pure config: Mamba is a
+drop-in child where attention would be (token-mixer interface).
+
+16 experts == model axis -> 1 expert per chip (expert parallelism).
+Mamba state is O(1) per token, attention is 1/8 of layers, so jamba RUNS
+long_500k.
+"""
+
+from repro.configs import common as c
+from repro.layers.ssm import MambaMixer
+
+ARCH_ID = "jamba-1.5-large-398b"
+
+
+def _block_pattern(d, Hq, Hkv, hd, dff, E, attn_index, n_layers):
+    layers = []
+    for i in range(n_layers):
+        if i == attn_index:
+            mixer = c.attention_cfg(num_heads=Hq, num_kv_heads=Hkv, head_dim=hd,
+                                    rope_theta=None)  # jamba: no RoPE
+        else:
+            mixer = MambaMixer.default_config()
+        ffn = c.moe_cfg(dff, num_experts=E, top_k=2) if i % 2 == 1 else c.ffn_cfg(dff)
+        layers.append(c.layer_cfg(d, mixer, ffn))
+    return layers
+
+
+def _model(blocks, d, Hq, Hkv, hd, dff, vocab, E, attn_index=4, n_layers=8,
+           remat="full"):
+    pattern = _block_pattern(d, Hq, Hkv, hd, dff, E, attn_index, n_layers)
+    stack = c.pattern_stack_cfg(pattern, blocks, remat=remat)
+    dec = c.decoder_cfg(vocab_size=vocab, dim=d, stack=stack,
+                        tied_embeddings=False)
+    return c.lm_cfg(dec)
+
+
+def make_model():
+    return _model(9, 8192, 64, 8, 128, 24576, 65536, E=16)
+
+
+def make_smoke():
+    # 1 block of 4 layers: mamba+dense, mamba+moe, attn+dense, mamba+moe.
+    return _model(1, 128, 4, 2, 32, 256, 128, E=4, attn_index=2, n_layers=4,
+                  remat=None)
+
+
+SPEC = c.ArchSpec(
+    arch_id=ARCH_ID, family="hybrid", citation="arXiv:2403.19887",
+    make_model=make_model, make_smoke=make_smoke,
+    vocab_size=65536, model_dim=8192,
+)

@@ -1,0 +1,40 @@
+"""mixtral-8x7b [moe] 32L d=4096 32H (GQA kv=8) d_ff=14336 vocab=32000.
+
+8 experts top-2 (renormalized gates) + sliding-window attention (4096)
+[arXiv:2401.04088]. MoE is a *drop-in* FeedForward replacement; with 8
+experts (16-way model axis not divisible) the experts are replicated and
+each expert's hidden dim is tensor-sharded instead — see
+configs.common.expert_specs.
+
+SWA means the decode cache is window-bounded, so this arch RUNS long_500k.
+"""
+
+from repro.configs import common as c
+
+ARCH_ID = "mixtral-8x7b"
+WINDOW = 4096
+
+
+def _model(L, d, Hq, Hkv, hd, dff, vocab, E, remat="full"):
+    attn = c.attention_cfg(num_heads=Hq, num_kv_heads=Hkv, head_dim=hd,
+                           rope_theta=1e6, sliding_window=WINDOW)
+    layer = c.layer_cfg(d, attn, c.moe_cfg(dff, num_experts=E, top_k=2))
+    dec = c.decoder_cfg(vocab_size=vocab, dim=d,
+                        stack=c.repeat_cfg(layer, L, remat=remat),
+                        tied_embeddings=False)
+    return c.lm_cfg(dec)
+
+
+def make_model():
+    return _model(32, 4096, 32, 8, 128, 14336, 32000, E=8)
+
+
+def make_smoke():
+    return _model(2, 128, 4, 2, 32, 256, 128, E=4, remat=None)
+
+
+SPEC = c.ArchSpec(
+    arch_id=ARCH_ID, family="moe", citation="arXiv:2401.04088",
+    make_model=make_model, make_smoke=make_smoke,
+    vocab_size=32000, model_dim=4096,
+)

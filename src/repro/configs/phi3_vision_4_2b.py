@@ -1,0 +1,38 @@
+"""phi-3-vision-4.2b [vlm] 32L d=3072 32H (kv=32) d_ff=8192 vocab=32064.
+
+phi3-mini decoder + CLIP frontend [hf:microsoft/Phi-3-vision-128k-instruct].
+
+Assignment carve-out: the vision encoder (CLIP ViT + projector) is a STUB —
+``input_specs`` provides pre-projected patch embeddings (B, 256, 3072) that
+the decoder consumes as a sequence prefix (Decoder._embed merge).
+"""
+
+from repro.configs import common as c
+
+ARCH_ID = "phi-3-vision-4.2b"
+
+
+def _model(L, d, Hq, Hkv, hd, dff, vocab, remat="full"):
+    attn = c.attention_cfg(num_heads=Hq, num_kv_heads=Hkv, head_dim=hd,
+                           rope_theta=10000.0)
+    layer = c.layer_cfg(d, attn, c.ffn_cfg(dff))
+    dec = c.decoder_cfg(vocab_size=vocab, dim=d,
+                        stack=c.repeat_cfg(layer, L, remat=remat),
+                        tied_embeddings=False)
+    return c.lm_cfg(dec)
+
+
+def make_model():
+    return _model(32, 3072, 32, 32, 96, 8192, 32064)
+
+
+def make_smoke():
+    return _model(2, 128, 4, 4, 32, 256, 128, remat=None)
+
+
+SPEC = c.ArchSpec(
+    arch_id=ARCH_ID, family="vlm", citation="hf:microsoft/Phi-3-vision-128k-instruct",
+    make_model=make_model, make_smoke=make_smoke,
+    vocab_size=32064, model_dim=3072, modality="vlm",
+    skip_shapes={"long_500k": "pure full-attention dense decoder; no sub-quadratic variant configured"},
+)

@@ -1,0 +1,34 @@
+"""qwen1.5-4b [dense] 40L d=2560 20H (GQA kv=20 == MHA) d_ff=6912 vocab=151936.
+
+QKV bias [hf:Qwen/Qwen1.5-0.5B family].
+"""
+
+from repro.configs import common as c
+
+ARCH_ID = "qwen1.5-4b"
+
+
+def _model(L, d, Hq, Hkv, hd, dff, vocab, remat="full"):
+    attn = c.attention_cfg(num_heads=Hq, num_kv_heads=Hkv, head_dim=hd,
+                           qkv_bias=True, rope_theta=1e6)
+    layer = c.layer_cfg(d, attn, c.ffn_cfg(dff))
+    dec = c.decoder_cfg(vocab_size=vocab, dim=d,
+                        stack=c.repeat_cfg(layer, L, remat=remat),
+                        tied_embeddings=False)
+    return c.lm_cfg(dec)
+
+
+def make_model():
+    return _model(40, 2560, 20, 20, 128, 6912, 151936)
+
+
+def make_smoke():
+    return _model(2, 160, 4, 4, 40, 320, 128, remat=None)
+
+
+SPEC = c.ArchSpec(
+    arch_id=ARCH_ID, family="dense", citation="hf:Qwen/Qwen1.5-0.5B",
+    make_model=make_model, make_smoke=make_smoke,
+    vocab_size=151936, model_dim=2560,
+    skip_shapes={"long_500k": "pure full-attention dense arch; no sub-quadratic variant configured"},
+)

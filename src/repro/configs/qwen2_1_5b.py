@@ -1,0 +1,34 @@
+"""qwen2-1.5b [dense] 28L d=1536 12H (GQA kv=2) d_ff=8960 vocab=151936.
+
+GQA with QKV bias, SwiGLU, tied embeddings [arXiv:2407.10671].
+"""
+
+from repro.configs import common as c
+
+ARCH_ID = "qwen2-1.5b"
+
+
+def _model(L, d, Hq, Hkv, hd, dff, vocab, remat="full"):
+    attn = c.attention_cfg(num_heads=Hq, num_kv_heads=Hkv, head_dim=hd,
+                           qkv_bias=True, rope_theta=1e6)
+    layer = c.layer_cfg(d, attn, c.ffn_cfg(dff))
+    dec = c.decoder_cfg(vocab_size=vocab, dim=d,
+                        stack=c.repeat_cfg(layer, L, remat=remat),
+                        tied_embeddings=True)
+    return c.lm_cfg(dec)
+
+
+def make_model():
+    return _model(28, 1536, 12, 2, 128, 8960, 151936)
+
+
+def make_smoke():
+    return _model(2, 128, 4, 2, 32, 256, 128, remat=None)
+
+
+SPEC = c.ArchSpec(
+    arch_id=ARCH_ID, family="dense", citation="arXiv:2407.10671",
+    make_model=make_model, make_smoke=make_smoke,
+    vocab_size=151936, model_dim=1536,
+    skip_shapes={"long_500k": "pure full-attention dense arch; no sub-quadratic variant configured"},
+)

@@ -1,0 +1,36 @@
+"""rwkv6-7b [ssm] 32L d=4096 (attention-free) d_ff=14336 vocab=65536.
+
+Finch: data-dependent decay WKV6 [arXiv:2404.05892]. head_dim=64 (64 heads).
+The stack is RWKV6Block (time-mix + channel-mix, both token-shift stateful).
+O(1) decode state -> RUNS long_500k.
+"""
+
+from repro.configs import common as c
+from repro.layers.rwkv import RWKV6Block
+
+ARCH_ID = "rwkv6-7b"
+
+
+def _model(L, d, dff, vocab, head_dim=64, lora=64, remat="full"):
+    block = RWKV6Block.default_config().set(input_dim=d)
+    block.time_mix.set(head_dim=head_dim, decay_lora_dim=lora)
+    block.channel_mix.set(hidden_dim=dff)
+    dec = c.decoder_cfg(vocab_size=vocab, dim=d,
+                        stack=c.repeat_cfg(block, L, remat=remat),
+                        tied_embeddings=False)
+    return c.lm_cfg(dec)
+
+
+def make_model():
+    return _model(32, 4096, 14336, 65536)
+
+
+def make_smoke():
+    return _model(2, 128, 256, 128, head_dim=32, lora=8, remat=None)
+
+
+SPEC = c.ArchSpec(
+    arch_id=ARCH_ID, family="ssm", citation="arXiv:2404.05892",
+    make_model=make_model, make_smoke=make_smoke,
+    vocab_size=65536, model_dim=4096,
+)

@@ -1,0 +1,1 @@
+from repro.data.input import SyntheticInput

@@ -1,0 +1,1 @@
+from repro.inference.engine import GenerationResult, InferenceEngine, Request

@@ -1,0 +1,197 @@
+"""TPU Pallas flash attention (forward), AXLearn-style kernel dispatch target.
+
+TPU-native adaptation of FlashAttention (paper §4.2 dispatches SplashAttention
+on TPU): the grid's innermost dimension iterates KV blocks *sequentially*
+(TPU grids are sequential in the last axis), carrying the online-softmax
+running max / denominator / accumulator in VMEM scratch — the TPU analogue of
+a CUDA thread-block's registers/SMEM. Block shapes default to (128, 128) to
+align with the 128x128 MXU tile and 8x128 VREG lanes.
+
+Supports: causal masking, sliding windows, logit soft-capping, and GQA
+(q-head -> kv-head mapping happens in the BlockSpec index_map so each KV
+block is fetched once per group, not once per q-head... per q-head grid step
+still fetches its group's block; Mosaic coalesces repeats across sequential
+steps).
+
+Forward only: training uses the XLA blockwise path (differentiable); the
+kernel is the serving/prefill hot path. Validated against
+``repro.kernels.ref.reference_attention`` in interpret mode (CPU).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_forward"]
+
+NEG_INF = -1e30
+_LANES = 128  # VREG lane count: scratch second-minor dim
+
+
+def _kernel(
+    # prefetch-scalar-free refs:
+    q_ref,  # (1, block_q, D)
+    k_ref,  # (1, block_k, D)
+    v_ref,  # (1, block_k, D)
+    o_ref,  # (1, block_q, D)
+    m_scr,  # (block_q, _LANES) f32
+    l_scr,  # (block_q, _LANES) f32
+    acc_scr,  # (block_q, D) f32
+    *,
+    block_q: int,
+    block_k: int,
+    kv_len: int,
+    num_kv_blocks: int,
+    causal: bool,
+    sliding_window: Optional[int],
+    logit_softcap: Optional[float],
+    scale: float,
+):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+
+    # Skip fully-masked blocks (beyond the causal frontier / outside window).
+    relevant = True
+    if causal:
+        relevant = jnp.logical_and(relevant, kj * block_k <= qi * block_q + block_q - 1)
+    if sliding_window is not None:
+        relevant = jnp.logical_and(
+            relevant, (kj + 1) * block_k - 1 > qi * block_q - sliding_window)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale  # (bq, D)
+        k = k_ref[0].astype(jnp.float32)  # (bk, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+        if logit_softcap is not None:
+            s = logit_softcap * jnp.tanh(s / logit_softcap)
+
+        mask = k_pos < kv_len
+        if causal:
+            mask = jnp.logical_and(mask, k_pos <= q_pos)
+        if sliding_window is not None:
+            mask = jnp.logical_and(mask, k_pos > q_pos - sliding_window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[:, 0:1]  # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # Guard fully-masked rows: keep exp argument finite.
+        p = jnp.exp(s - jnp.where(m_new <= NEG_INF / 2, 0.0, m_new))
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - jnp.where(m_new <= NEG_INF / 2, 0.0, m_new))
+        alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, alpha)
+
+        l_new = alpha * l_scr[:, 0:1] + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)  # (bk, D)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha + pv
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(kj == num_kv_blocks - 1)
+    def _finalize():
+        l = l_scr[:, 0:1]
+        denom = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_forward(
+    q: jax.Array,  # (B, S, Hq, D)
+    k: jax.Array,  # (B, T, Hkv, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    sliding_window: Optional[int] = None,
+    logit_softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, S, Hq, D = q.shape
+    _, T, Hkv, _ = k.shape
+    assert Hq % Hkv == 0
+    G = Hq // Hkv
+    scale = (D ** -0.5) if scale is None else scale
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+
+    # Pad sequence dims to block multiples (mask handles the tail).
+    S_pad = -(-S // block_q) * block_q
+    T_pad = -(-T // block_k) * block_k
+    if S_pad != S:
+        q = jnp.pad(q, ((0, 0), (0, S_pad - S), (0, 0), (0, 0)))
+    if T_pad != T:
+        k = jnp.pad(k, ((0, 0), (0, T_pad - T), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, T_pad - T), (0, 0), (0, 0)))
+
+    # Head-major layout: (B*H, S, D).
+    qh = q.transpose(0, 2, 1, 3).reshape(B * Hq, S_pad, D)
+    kh = k.transpose(0, 2, 1, 3).reshape(B * Hkv, T_pad, D)
+    vh = v.transpose(0, 2, 1, 3).reshape(B * Hkv, T_pad, D)
+
+    num_q_blocks = S_pad // block_q
+    num_kv_blocks = T_pad // block_k
+    grid = (B * Hq, num_q_blocks, num_kv_blocks)
+
+    def q_index(bh, qi, kj):
+        return (bh, qi, 0)
+
+    def kv_index(bh, qi, kj):
+        b, h = bh // Hq, bh % Hq
+        return (b * Hkv + h // G, kj, 0)
+
+    kernel = functools.partial(
+        _kernel,
+        block_q=block_q,
+        block_k=block_k,
+        kv_len=T,
+        num_kv_blocks=num_kv_blocks,
+        causal=causal,
+        sliding_window=sliding_window,
+        logit_softcap=logit_softcap,
+        scale=scale,
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), q_index),
+            pl.BlockSpec((1, block_k, D), kv_index),
+            pl.BlockSpec((1, block_k, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), q_index),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, S_pad, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(qh, kh, vh)
+
+    out = out.reshape(B, Hq, S_pad, D).transpose(0, 2, 1, 3)
+    return out[:, :S]

@@ -1,0 +1,70 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+The layer library calls these; backend selection (real TPU kernel vs
+interpret-mode validation on CPU vs pure-XLA fallback) is a *config* choice
+threaded from mesh rules (paper §4.2), never a code change.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.flash_attention import flash_attention_forward
+from repro.kernels.rmsnorm import rmsnorm_forward
+
+__all__ = ["flash_attention", "rmsnorm", "wkv6"]
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    q_positions=None,
+    k_positions=None,
+    causal: bool = True,
+    sliding_window: Optional[int] = None,
+    logit_softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Flash attention for contiguous self-attention (q/k share positions).
+
+    Decode steps (ragged cache positions) fall back to the reference path —
+    a 1-token query is GEMV-bound, not a flash-kernel shape.
+    """
+    same_positions = q_positions is None or (q_positions is k_positions)
+    if not same_positions or q.shape[1] == 1:
+        return _ref.reference_attention(
+            q, k, v, q_positions=q_positions, k_positions=k_positions,
+            causal=causal, sliding_window=sliding_window,
+            logit_softcap=logit_softcap, scale=scale)
+    return flash_attention_forward(
+        q, k, v, causal=causal, sliding_window=sliding_window,
+        logit_softcap=logit_softcap, scale=scale,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6,
+            block_rows: int = 256, interpret: bool = False) -> jax.Array:
+    return rmsnorm_forward(x, scale, eps=eps, block_rows=block_rows,
+                           interpret=interpret)
+
+
+def wkv6(r, k, v, w, u, state=None, *, chunk_size: int = 64,
+         interpret: bool = False):
+    """WKV6 core. Pallas chunked kernel when available; ref otherwise."""
+    try:
+        from repro.kernels.wkv6 import wkv6_forward
+
+        return wkv6_forward(r, k, v, w, u, state, chunk_size=chunk_size,
+                            interpret=interpret)
+    except ImportError:
+        return _ref.reference_wkv6(r, k, v, w, u, state, chunk_size=chunk_size)

@@ -1,0 +1,197 @@
+"""§Perf hillclimbing harness: named config variants over the dry-run.
+
+Each variant is a config-mutating function (the paper's modifier mechanism);
+the harness lowers the SAME (arch × shape) with the variant applied and
+records the deltas vs baseline. All changes are configuration — zero layer
+code edits — which is itself the reproduction's point.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.hillclimb \
+      --arch mixtral-8x7b --shape train_4k --variant moe_c_shard
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.core.config import visit_config
+from repro.launch import dryrun
+
+
+# --------------------------------------------------------------------------
+# Variant library (hypotheses live in EXPERIMENTS.md §Perf)
+# --------------------------------------------------------------------------
+
+
+def moe_c_shard(model_cfg):
+    """Shard the MoE capacity dim over "model" when experts can't divide it
+    (mixtral E=8 on a 16-way axis): dispatch/combine (G,S,E,C) and expert
+    activations (E,G,C,D) go from E-replicated to C-sharded."""
+
+    def visit(path, cfg):
+        if "dispatch_partition" in cfg.keys() and "num_experts" in cfg.keys():
+            if cfg.num_experts and cfg.num_experts % 16 != 0:
+                cfg.set(dispatch_partition=(("pod", "data"), None, None, "model"),
+                        expert_partition=(None, ("pod", "data"), "model", None))
+
+    visit_config(model_cfg, visit)
+
+
+def moe_capacity_1(model_cfg):
+    """capacity_factor 2.0 -> 1.0: halves dispatch/expert activation volume
+    (and the all-to-all) at the cost of more dropped tokens."""
+
+    def visit(path, cfg):
+        if "capacity_factor" in cfg.keys():
+            cfg.set(capacity_factor=1.0)
+
+    visit_config(model_cfg, visit)
+
+
+def remat_save_ffn(model_cfg):
+    """Remat policy: save attention/mixer and FFN outputs instead of
+    recomputing everything — trades HBM for recompute FLOPs."""
+
+    def visit(path, cfg):
+        if "remat_policy" in cfg.keys():
+            cfg.set(remat_policy="save:attn_out,ffn_out,mixer_out")
+
+    visit_config(model_cfg, visit)
+
+
+def block_remat_each_layer(model_cfg):
+    """Nested remat: checkpoint every layer inside a heterogeneous Block so
+    block backward recomputes one layer at a time (jamba's 8-layer block)."""
+
+    def visit(path, cfg):
+        if "remat_each_layer" in cfg.keys():
+            cfg.set(remat_each_layer=True)
+
+    visit_config(model_cfg, visit)
+
+
+def seq_parallel_activations(model_cfg):
+    """Shard inter-layer activations on the SEQUENCE dim over "model"
+    (sequence parallelism) instead of the embedding dim."""
+
+    def visit(path, cfg):
+        if "activation_partition" in cfg.keys():
+            cfg.set(activation_partition=(("pod", "data"), "model", None))
+
+    visit_config(model_cfg, visit)
+
+
+def kv_cache_f8(model_cfg):
+    """KV cache in fp8 (e4m3): halves decode cache bytes vs bf16 — the
+    quantized-cache serving lever (beyond-paper for this shape)."""
+
+    def visit(path, cfg):
+        if "kv_cache_dtype" in cfg.keys():
+            cfg.set(kv_cache_dtype=jnp.float8_e4m3fn)
+
+    visit_config(model_cfg, visit)
+
+
+def attn_chunk_2k(model_cfg):
+    """Bigger blockwise-attention q-chunks (512 -> 2048): fewer scan steps /
+    larger matmuls, at higher live-logits memory."""
+
+    def visit(path, cfg):
+        if "blockwise_chunk_size" in cfg.keys():
+            cfg.set(blockwise_chunk_size=2048)
+
+    visit_config(model_cfg, visit)
+
+
+def mamba_chunk_512(model_cfg):
+    def visit(path, cfg):
+        if "scan_chunk_size" in cfg.keys():
+            cfg.set(scan_chunk_size=512)
+
+    visit_config(model_cfg, visit)
+
+
+def grad_accum_4(model_cfg):
+    """Marker variant — grad accumulation is a trainer field; handled in
+    run_variant below."""
+
+
+def params_bf16(model_cfg):
+    """bf16 parameters (+ the trainer already uses bf16 moments for giants):
+    halves FSDP all-gather and grad all-reduce bytes."""
+    from repro.launch.dryrun import set_param_dtype
+
+    set_param_dtype(model_cfg, jnp.bfloat16)
+
+
+def moe_grouping(model_cfg):
+    """GShard token grouping (4096/group): dispatch tensors go from
+    O(tokens*S) to O(tokens*4096) — the long-sequence MoE fix."""
+
+    def visit(path, cfg):
+        if "group_size" in cfg.keys():
+            cfg.set(group_size=4096)
+
+    visit_config(model_cfg, visit)
+
+
+VARIANTS = {
+    "params_bf16": params_bf16,
+    "moe_grouping": moe_grouping,
+    "moe_c_shard": moe_c_shard,
+    "moe_capacity_1": moe_capacity_1,
+    "remat_save_ffn": remat_save_ffn,
+    "block_remat_each_layer": block_remat_each_layer,
+    "seq_parallel": seq_parallel_activations,
+    "kv_cache_f8": kv_cache_f8,
+    "attn_chunk_2k": attn_chunk_2k,
+    "mamba_chunk_512": mamba_chunk_512,
+}
+
+
+def run_variant(arch: str, shape: str, variant: str, out_dir: str,
+                mesh_kind: str = "single"):
+    fns = [VARIANTS[v] for v in variant.split("+")] if variant else []
+
+    def hook(model_cfg):
+        for fn in fns:
+            fn(model_cfg)
+
+    dryrun.EXTRA_CONFIG_HOOK = hook if fns else None
+    dryrun.run_one.variant_name = variant
+    try:
+        rec = dryrun.run_one(arch, shape, mesh_kind, out_dir)
+    finally:
+        dryrun.EXTRA_CONFIG_HOOK = None
+        dryrun.run_one.variant_name = ""
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True,
+                    help="name or 'a+b' composition from VARIANTS")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--out", default="experiments/hillclimb")
+    args = ap.parse_args()
+    rec = run_variant(args.arch, args.shape, args.variant, args.out, args.mesh)
+    if rec["status"] == "ok":
+        m, r = rec["memory"], rec.get("roofline", {})
+        print(f"[hillclimb] {args.arch} {args.shape} {args.variant}: "
+              f"peak={m['peak_per_device']/2**30:.2f}GiB fits={m['fits']} "
+              + (f"compute={r['compute_s']*1e3:.1f}ms mem={r['memory_s']*1e3:.1f}ms "
+                 f"coll={r['collective_s']*1e3:.1f}ms dom={r['dominant']}"
+                 if r else ""))
+    else:
+        print(f"[hillclimb] {rec['status']}: {rec.get('error', '')[:300]}")
+
+
+if __name__ == "__main__":
+    main()

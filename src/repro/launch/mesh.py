@@ -1,0 +1,33 @@
+"""Production mesh definitions (assignment spec).
+
+A FUNCTION, not a module-level constant — importing this module never touches
+jax device state (device count is locked at first jax init, so the dry-run
+must set XLA_FLAGS before any jax usage).
+
+Axis roles (see DESIGN.md §5):
+  pod   — data parallelism across DCN (multi-pod only)
+  data  — FSDP / batch within a pod (16)
+  model — tensor/expert parallel within a pod (16)
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "SINGLE_POD_SHAPE", "MULTI_POD_SHAPE"]
+
+SINGLE_POD_SHAPE = (16, 16)  # 256 chips of TPU v5e
+MULTI_POD_SHAPE = (2, 16, 16)  # 2 pods = 512 chips
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = MULTI_POD_SHAPE if multi_pod else SINGLE_POD_SHAPE
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh for tests (requires xla_force_host_platform_device_count)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

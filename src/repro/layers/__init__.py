@@ -1,0 +1,15 @@
+"""Layer library: strictly-encapsulated, config-composed building blocks."""
+
+from repro.layers.attention import MultiheadAttention
+from repro.layers.base import BaseLayer, ParameterSpec
+from repro.layers.basic import Dropout, Embedding, LayerNorm, Linear, RMSNorm
+from repro.layers.causal_lm import CausalLM, MaskedLM, cross_entropy
+from repro.layers.ffn import FeedForward, scaled_hidden_dim
+from repro.layers.rope import LinearScaledRotaryEmbedding, RotaryEmbedding
+from repro.layers.transformer import (
+    Block,
+    Decoder,
+    Repeat,
+    StackedTransformer,
+    TransformerLayer,
+)

@@ -1,0 +1,265 @@
+"""Multi-head / grouped-query attention with an encapsulated KV cache.
+
+Token-mixer interface (shared with Mamba/RWKV so any of them is a drop-in
+child of TransformerLayer — the paper's encapsulation claim, §6):
+
+  forward(x, positions=None) -> y                       # full-sequence
+  init_states(batch, max_len) -> state                  # empty cache
+  prefill(x, positions=None) -> (state, y)              # fill cache
+  extend_step(state, x_step) -> (state, y_step)         # decode step(s)
+
+The KV cache layout (dense vs sliding-window ring buffer) is a private
+detail of this layer: serving engines only see opaque state pytrees, which
+is what lets paged/continuous-batching techniques integrate without touching
+model code (paper §6).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import REQUIRED, Required, config_class
+from repro.core.module import no_context
+from repro.core.utils import PartitionSpecLike, remat_name
+from repro.kernels import ref as kernel_ref
+from repro.core.config import ConfigBase
+from repro.layers.base import BaseLayer, fan_in_init
+from repro.layers.basic import Linear
+from repro.layers.rope import BaseRotaryEmbedding, RotaryEmbedding
+
+__all__ = ["MultiheadAttention"]
+
+
+class MultiheadAttention(BaseLayer):
+    @config_class
+    class Config(BaseLayer.Config):
+        input_dim: Required[int] = REQUIRED
+        num_heads: Required[int] = REQUIRED
+        num_kv_heads: Optional[int] = None  # None -> MHA
+        head_dim: Optional[int] = None  # None -> input_dim // num_heads
+        qkv_bias: bool = False
+        out_bias: bool = False
+        # Projection template: the DotGeneral-swap point (paper §4.2) — e.g.
+        # QuantizedLinear replaces it via one config traversal.
+        proj: ConfigBase = Linear.Config()
+        # Swappable positional-embedding child; None disables RoPE.
+        rope: Optional[BaseRotaryEmbedding.Config] = RotaryEmbedding.Config()
+        causal: bool = True
+        sliding_window: Optional[int] = None
+        logit_softcap: Optional[float] = None
+        # None -> 1/sqrt(head_dim); gemma2 overrides (query_pre_attn_scalar).
+        query_scale: Optional[float] = None
+        # "ref" | "blockwise" | "flash" (Pallas). Mesh rules select per target.
+        impl: str = "blockwise"
+        blockwise_chunk_size: int = 512
+        blockwise_unroll: bool = False
+        # Pallas kernel runs interpreted off-TPU (config, not code: §4.2).
+        kernel_interpret: bool = False
+        # Named-axis shardings.
+        qkv_weight_partition: PartitionSpecLike = ("data", "model")
+        out_weight_partition: PartitionSpecLike = ("model", "data")
+        # Activation sharding for (B, S, H*D) projections.
+        hidden_partition: PartitionSpecLike = (("pod", "data"), None, "model")
+        # KV cache sharding (B, T, Hkv, D).
+        kv_cache_partition: PartitionSpecLike = (("pod", "data"), None, "model", None)
+        kv_cache_dtype: Any = jnp.bfloat16
+
+    def __init__(self, cfg, *, parent=None):
+        super().__init__(cfg, parent=parent)
+        cfg = self.config
+        if cfg.num_kv_heads is None:
+            cfg.set(num_kv_heads=cfg.num_heads)
+        if cfg.head_dim is None:
+            cfg.set(head_dim=cfg.input_dim // cfg.num_heads)
+        if cfg.num_heads % cfg.num_kv_heads != 0:
+            raise ValueError(f"num_heads {cfg.num_heads} % num_kv_heads {cfg.num_kv_heads} != 0")
+        proj = cfg.proj.clone().set(
+            input_dim=cfg.input_dim,
+            bias=cfg.qkv_bias,
+            weight_partition=cfg.qkv_weight_partition,
+            param_dtype=cfg.param_dtype,
+        )
+        self._add_child("q_proj", proj.clone(output_dim=cfg.num_heads * cfg.head_dim))
+        self._add_child("k_proj", proj.clone(output_dim=cfg.num_kv_heads * cfg.head_dim))
+        self._add_child("v_proj", proj.clone(output_dim=cfg.num_kv_heads * cfg.head_dim))
+        self._add_child(
+            "o_proj",
+            cfg.proj.clone().set(
+                input_dim=cfg.num_heads * cfg.head_dim,
+                output_dim=cfg.input_dim,
+                bias=cfg.out_bias,
+                weight_partition=cfg.out_weight_partition,
+                param_dtype=cfg.param_dtype,
+            ),
+        )
+        if cfg.rope is not None:
+            rope_cfg = cfg.rope.clone()
+            if not rope_cfg.dim:
+                rope_cfg.set(dim=cfg.head_dim)
+            self._add_child("rope", rope_cfg)
+
+    # ------------------------------------------------------------------ utils
+
+    def _project_qkv(self, x: jax.Array, positions: jax.Array):
+        cfg = self.config
+        B, S, _ = x.shape
+        q = self.q_proj(x)
+        k = self.k_proj(x)
+        v = self.v_proj(x)
+        q = self._shard(q, cfg.hidden_partition)
+        k = remat_name(k, "kv_proj")
+        q = remat_name(q, "q_proj")
+        q = q.reshape(B, S, cfg.num_heads, cfg.head_dim)
+        k = k.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+        v = v.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+        if "rope" in self._children:
+            q = self.rope.apply(q, positions)
+            k = self.rope.apply(k, positions)
+        return q, k, v
+
+    def _attend(self, q, k, v, *, q_positions, k_positions, decode=False):
+        cfg = self.config
+        kwargs = dict(
+            q_positions=q_positions,
+            k_positions=k_positions,
+            causal=cfg.causal,
+            sliding_window=cfg.sliding_window,
+            logit_softcap=cfg.logit_softcap,
+            scale=cfg.query_scale,
+        )
+        if decode and cfg.kv_cache_partition is not None:
+            kv_spec = tuple(cfg.kv_cache_partition)
+            # logits (B, Hkv, G, S', T): batch + cache-seq axes from config.
+            spec = (kv_spec[0], None, None, None, kv_spec[1])
+            kwargs["logits_shard_fn"] = lambda l: self._shard(l, spec)
+            return kernel_ref.reference_attention(q, k, v, **kwargs)
+        if cfg.impl == "flash":
+            from repro.kernels import ops as kernel_ops
+
+            out = kernel_ops.flash_attention(
+                q, k, v, interpret=cfg.kernel_interpret, **kwargs)
+        elif cfg.impl == "blockwise":
+            out = kernel_ref.blockwise_attention(
+                q, k, v, chunk_size=cfg.blockwise_chunk_size,
+                unroll=cfg.blockwise_unroll, **kwargs)
+        elif cfg.impl == "ref":
+            out = kernel_ref.reference_attention(q, k, v, **kwargs)
+        else:
+            raise ValueError(f"Unknown attention impl {cfg.impl!r}")
+        return out
+
+    # --------------------------------------------------------------- forward
+
+    def forward(self, x: jax.Array, positions: Optional[jax.Array] = None) -> jax.Array:
+        cfg = self.config
+        B, S, _ = x.shape
+        if positions is None:
+            positions = jnp.arange(S)
+        q, k, v = self._project_qkv(x, positions)
+        out = self._attend(q, k, v, q_positions=positions, k_positions=positions)
+        out = remat_name(out, "attn_out")
+        out = out.reshape(B, S, cfg.num_heads * cfg.head_dim)
+        out = self._shard(out, cfg.hidden_partition)
+        return self.o_proj(out)
+
+    # ---------------------------------------------------------------- decode
+
+    def _cache_len(self, max_len: int) -> int:
+        cfg = self.config
+        if cfg.sliding_window is not None:
+            return min(max_len, cfg.sliding_window)
+        return max_len
+
+    @no_context
+    def state_partition_specs(self, *_):
+        """Named-axis shardings for the init_states pytree (used by launchers
+        to build explicit in_shardings for serve_step)."""
+        cfg = self.config
+        kv = tuple(cfg.kv_cache_partition) if cfg.kv_cache_partition else (None,) * 4
+        return {"k": kv, "v": kv, "pos": (kv[0], kv[1]), "index": (kv[0],)}
+
+    def init_states(self, batch_size: int, max_len: int) -> Dict[str, Any]:
+        """Empty KV cache. ``pos`` tracks the absolute position in each slot
+        (-1 = invalid), which makes ring-buffer masking trivial."""
+        cfg = self.config
+        T = self._cache_len(max_len)
+        shape = (batch_size, T, cfg.num_kv_heads, cfg.head_dim)
+        cache = {
+            "k": jnp.zeros(shape, cfg.kv_cache_dtype),
+            "v": jnp.zeros(shape, cfg.kv_cache_dtype),
+            # Per-row slot positions/index: continuous batching admits new
+            # requests into individual slots mid-flight (paper §6).
+            "pos": jnp.full((batch_size, T), -1, jnp.int32),
+            "index": jnp.zeros((batch_size,), jnp.int32),
+        }
+        cache["k"] = self._shard(cache["k"], cfg.kv_cache_partition)
+        cache["v"] = self._shard(cache["v"], cfg.kv_cache_partition)
+        return cache
+
+    def prefill(self, state: Dict[str, Any], x: jax.Array,
+                positions: Optional[jax.Array] = None) -> Tuple[Dict[str, Any], jax.Array]:
+        """Runs the full forward over the prompt and fills the cache."""
+        cfg = self.config
+        B, S, _ = x.shape
+        if positions is None:
+            positions = jnp.arange(S)
+        q, k, v = self._project_qkv(x, positions)
+        out = self._attend(q, k, v, q_positions=positions, k_positions=positions)
+        out = out.reshape(B, S, cfg.num_heads * cfg.head_dim)
+        y = self.o_proj(out)
+
+        T = state["k"].shape[1]
+        if S >= T:
+            # Keep only the last T tokens (ring layout by absolute position).
+            k_keep, v_keep, p_keep = k[:, -T:], v[:, -T:], positions[-T:]
+        else:
+            k_keep, v_keep, p_keep = k, v, positions
+        slots = p_keep % T
+        new_k = state["k"].at[:, slots].set(k_keep.astype(cfg.kv_cache_dtype))
+        new_v = state["v"].at[:, slots].set(v_keep.astype(cfg.kv_cache_dtype))
+        new_pos = state["pos"].at[:, slots].set(p_keep.astype(jnp.int32)[None, :])
+        new_state = {
+            "k": self._shard(new_k, cfg.kv_cache_partition),
+            "v": self._shard(new_v, cfg.kv_cache_partition),
+            "pos": new_pos,
+            "index": jnp.full((B,), S, jnp.int32),
+        }
+        return new_state, y
+
+    def extend_step(self, state: Dict[str, Any], x_step: jax.Array
+                    ) -> Tuple[Dict[str, Any], jax.Array]:
+        """Decode S' >= 1 new tokens against the cache."""
+        cfg = self.config
+        B, S_new, _ = x_step.shape
+        T = state["k"].shape[1]
+        index = state["index"]  # (B,)
+        positions = index[:, None] + jnp.arange(S_new)[None, :]  # (B, S')
+        q, k, v = self._project_qkv(x_step, positions)
+
+        slots = positions % T  # (B, S')
+        rows = jnp.arange(B)[:, None]
+        new_k = state["k"].at[rows, slots].set(k.astype(cfg.kv_cache_dtype))
+        new_v = state["v"].at[rows, slots].set(v.astype(cfg.kv_cache_dtype))
+        new_pos = state["pos"].at[rows, slots].set(positions.astype(jnp.int32))
+
+        out = self._attend(
+            q,
+            new_k.astype(q.dtype),
+            new_v.astype(q.dtype),
+            q_positions=positions,
+            k_positions=new_pos,
+            decode=True,
+        )
+        out = out.reshape(B, S_new, cfg.num_heads * cfg.head_dim)
+        y = self.o_proj(out)
+        new_state = {
+            "k": self._shard(new_k, cfg.kv_cache_partition),
+            "v": self._shard(new_v, cfg.kv_cache_partition),
+            "pos": new_pos,
+            "index": index + S_new,
+        }
+        return new_state, y

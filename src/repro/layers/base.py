@@ -1,0 +1,152 @@
+"""BaseLayer: parameterized modules with spec-driven init and sharding.
+
+Parameters are declared as :class:`ParameterSpec` (shape, dtype, initializer,
+``mesh_axes``) — the mesh_axes carry the *named-axis* partition spec that the
+paper's config-based parallelism (§4.2) hinges on. The trainer and the AOT
+dry-run consume the spec tree to build NamedShardings; layers never touch
+devices.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import zlib
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import REQUIRED, Required, config_class
+from repro.core.module import Module
+from repro.core.utils import PartitionSpecLike, maybe_shard
+
+__all__ = [
+    "ParameterSpec",
+    "BaseLayer",
+    "Initializer",
+    "constant_init",
+    "zeros_init",
+    "ones_init",
+    "normal_init",
+    "fan_in_init",
+    "uniform_scale_init",
+]
+
+Initializer = Callable[[jax.Array, Tuple[int, ...], Any], jax.Array]
+
+
+def zeros_init() -> Initializer:
+    return lambda key, shape, dtype: jnp.zeros(shape, dtype)
+
+
+def ones_init() -> Initializer:
+    return lambda key, shape, dtype: jnp.ones(shape, dtype)
+
+
+def constant_init(value: float) -> Initializer:
+    return lambda key, shape, dtype: jnp.full(shape, value, dtype)
+
+
+def normal_init(stddev: float = 0.02) -> Initializer:
+    return lambda key, shape, dtype: (jax.random.normal(key, shape) * stddev).astype(dtype)
+
+
+def fan_in_init(scale: float = 1.0, fan_in_axes: Sequence[int] = (-2,)) -> Initializer:
+    """Truncated-normal-ish fan-in init (std = scale / sqrt(fan_in))."""
+
+    def init(key, shape, dtype):
+        fan_in = 1
+        for ax in fan_in_axes:
+            fan_in *= shape[ax]
+        std = scale / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, shape) * std).astype(dtype)
+
+    return init
+
+
+def uniform_scale_init(scale: float = 1.0) -> Initializer:
+    def init(key, shape, dtype):
+        fan_in = shape[0] if shape else 1
+        bound = scale * math.sqrt(3.0 / max(fan_in, 1))
+        return jax.random.uniform(key, shape, minval=-bound, maxval=bound).astype(dtype)
+
+    return init
+
+
+@dataclasses.dataclass
+class ParameterSpec:
+    """Declarative description of one parameter."""
+
+    shape: Tuple[int, ...]
+    dtype: Any = jnp.float32
+    initializer: Optional[Initializer] = None
+    # Named-axis partition spec, e.g. ("data", "model"). None = replicated.
+    mesh_axes: PartitionSpecLike = None
+    # Weight-decay / clipping hints for the learner.
+    weight_decay_scale: float = 1.0
+
+    def initialize(self, key: jax.Array) -> jax.Array:
+        init = self.initializer or normal_init()
+        return init(key, tuple(self.shape), self.dtype)
+
+
+def _stable_hash(name: str) -> int:
+    return zlib.crc32(name.encode("utf-8"))
+
+
+class BaseLayer(Module):
+    """Module with parameters."""
+
+    @config_class
+    class Config(Module.Config):
+        # Parameter dtype. Compute dtype follows inputs; params are cast at
+        # use-sites if a global policy requires it.
+        param_dtype: Any = jnp.float32
+        # Optional override of every own-param partition spec (layers define
+        # per-param defaults in _create_layer_parameter_specs).
+        param_partition_spec: Optional[Any] = None
+
+    # --- parameter declaration (override in subclasses) ---------------------
+
+    def _create_layer_parameter_specs(self) -> Dict[str, ParameterSpec]:
+        return {}
+
+    # --- recursive spec/init (structural: no InvocationContext needed) ------
+
+    def create_parameter_specs_recursively(self) -> Dict[str, Any]:
+        specs: Dict[str, Any] = {}
+        own = self._create_layer_parameter_specs()
+        for name, spec in own.items():
+            if self.config.param_partition_spec is not None:
+                spec = dataclasses.replace(spec, mesh_axes=self.config.param_partition_spec)
+            if spec.dtype is None:
+                spec = dataclasses.replace(spec, dtype=self.config.param_dtype)
+            specs[name] = spec
+        for child_name, child in self._children.items():
+            if isinstance(child, BaseLayer):
+                child_specs = child.create_parameter_specs_recursively()
+                if child_specs:
+                    specs[child_name] = child_specs
+        return specs
+
+    def initialize_parameters_recursively(self, prng_key: jax.Array) -> Dict[str, Any]:
+        params: Dict[str, Any] = {}
+        own = self._create_layer_parameter_specs()
+        for name, spec in own.items():
+            if spec.dtype is None:
+                spec = dataclasses.replace(spec, dtype=self.config.param_dtype)
+            sub_key = jax.random.fold_in(prng_key, _stable_hash(name))
+            params[name] = spec.initialize(sub_key)
+        for child_name, child in self._children.items():
+            if isinstance(child, BaseLayer):
+                sub_key = jax.random.fold_in(prng_key, _stable_hash(child_name))
+                child_params = child.initialize_parameters_recursively(sub_key)
+                if child_params:
+                    params[child_name] = child_params
+        return params
+
+    # --- conveniences ---------------------------------------------------------
+
+    def _shard(self, x: jax.Array, spec: PartitionSpecLike) -> jax.Array:
+        return maybe_shard(x, spec)

@@ -1,0 +1,215 @@
+"""Basic layers: Linear, Embedding, Dropout, norms, activations."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import REQUIRED, Required, config_class
+from repro.core.utils import PartitionSpecLike
+from repro.layers.base import (
+    BaseLayer,
+    ParameterSpec,
+    fan_in_init,
+    normal_init,
+    ones_init,
+    zeros_init,
+)
+
+__all__ = [
+    "get_activation",
+    "Linear",
+    "Embedding",
+    "Dropout",
+    "LayerNorm",
+    "RMSNorm",
+]
+
+
+def _quick_gelu(x):
+    return x * jax.nn.sigmoid(1.702 * x)
+
+
+_ACTIVATIONS: Dict[str, Callable] = {
+    "linear": lambda x: x,
+    "nn.relu": jax.nn.relu,
+    "nn.silu": jax.nn.silu,
+    "nn.gelu": jax.nn.gelu,
+    "nn.gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+    "nn.tanh": jnp.tanh,
+    "nn.sigmoid": jax.nn.sigmoid,
+    "quick_gelu": _quick_gelu,
+    "nn.softplus": jax.nn.softplus,
+    "nn.relu2": lambda x: jnp.square(jax.nn.relu(x)),
+}
+
+
+def get_activation(name: str) -> Callable:
+    if name not in _ACTIVATIONS:
+        raise KeyError(f"Unknown activation {name!r}; known: {sorted(_ACTIVATIONS)}")
+    return _ACTIVATIONS[name]
+
+
+class Linear(BaseLayer):
+    """y = x @ W (+ b). Weight shape (input_dim, output_dim)."""
+
+    @config_class
+    class Config(BaseLayer.Config):
+        input_dim: Required[int] = REQUIRED
+        output_dim: Required[int] = REQUIRED
+        bias: bool = True
+        # Named-axis sharding of the weight; bias sharding is inferred from
+        # the output axis (paper §4.2: "automatically infers the bias
+        # sharding from the sharding of the model weights").
+        weight_partition: PartitionSpecLike = None
+        # Optional sharding constraint on outputs.
+        output_partition: PartitionSpecLike = None
+
+    def _create_layer_parameter_specs(self):
+        cfg = self.config
+        specs = {
+            "weight": ParameterSpec(
+                shape=(cfg.input_dim, cfg.output_dim),
+                dtype=cfg.param_dtype,
+                initializer=fan_in_init(),
+                mesh_axes=cfg.weight_partition,
+            )
+        }
+        if cfg.bias:
+            out_axes = None
+            if cfg.weight_partition is not None:
+                out_axes = (cfg.weight_partition[-1],)
+            specs["bias"] = ParameterSpec(
+                shape=(cfg.output_dim,),
+                dtype=cfg.param_dtype,
+                initializer=zeros_init(),
+                mesh_axes=out_axes,
+                weight_decay_scale=0.0,
+            )
+        return specs
+
+    def forward(self, x: jax.Array) -> jax.Array:
+        w = self.state["weight"].astype(x.dtype)
+        y = x @ w
+        if self.config.bias:
+            y = y + self.state["bias"].astype(x.dtype)
+        if self.config.output_partition is not None:
+            y = self._shard(y, self.config.output_partition)
+        return y
+
+
+class Embedding(BaseLayer):
+    """Token embedding with optional tied-head attend()."""
+
+    @config_class
+    class Config(BaseLayer.Config):
+        num_embeddings: Required[int] = REQUIRED
+        dim: Required[int] = REQUIRED
+        weight_partition: PartitionSpecLike = ("model", "data")
+        scale_by_sqrt_dim: bool = False  # gemma-style embedding scaling
+
+    def _create_layer_parameter_specs(self):
+        cfg = self.config
+        return {
+            "weight": ParameterSpec(
+                shape=(cfg.num_embeddings, cfg.dim),
+                dtype=cfg.param_dtype,
+                initializer=normal_init(0.02),
+                mesh_axes=cfg.weight_partition,
+                weight_decay_scale=0.0,
+            )
+        }
+
+    def forward(self, ids: jax.Array) -> jax.Array:
+        w = self.state["weight"]
+        out = jnp.take(w, ids, axis=0)
+        if self.config.scale_by_sqrt_dim:
+            out = out * jnp.sqrt(jnp.asarray(self.config.dim, out.dtype))
+        return out
+
+    def attend(self, x: jax.Array) -> jax.Array:
+        """Tied LM head: logits = x @ E^T."""
+        w = self.state["weight"].astype(x.dtype)
+        return x @ w.T
+
+
+class Dropout(BaseLayer):
+    @config_class
+    class Config(BaseLayer.Config):
+        rate: float = 0.0
+
+    def forward(self, x: jax.Array) -> jax.Array:
+        rate = self.config.rate
+        if not self.is_training or rate == 0.0:
+            return x
+        keep = 1.0 - rate
+        mask = jax.random.bernoulli(self.prng_key, p=keep, shape=x.shape)
+        return jnp.where(mask, x / keep, jnp.zeros_like(x))
+
+
+class LayerNorm(BaseLayer):
+    @config_class
+    class Config(BaseLayer.Config):
+        input_dim: Required[int] = REQUIRED
+        eps: float = 1e-5
+        use_bias: bool = True
+
+    def _create_layer_parameter_specs(self):
+        cfg = self.config
+        specs = {
+            "scale": ParameterSpec((cfg.input_dim,), cfg.param_dtype, ones_init(),
+                                   weight_decay_scale=0.0)
+        }
+        if cfg.use_bias:
+            specs["bias"] = ParameterSpec((cfg.input_dim,), cfg.param_dtype, zeros_init(),
+                                          weight_decay_scale=0.0)
+        return specs
+
+    def forward(self, x: jax.Array) -> jax.Array:
+        cfg = self.config
+        xf = x.astype(jnp.float32)
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mean) * jax.lax.rsqrt(var + cfg.eps)
+        y = y * self.state["scale"].astype(jnp.float32)
+        if cfg.use_bias:
+            y = y + self.state["bias"].astype(jnp.float32)
+        return y.astype(x.dtype)
+
+
+class RMSNorm(BaseLayer):
+    """RMSNorm, fp32 accumulation; optionally dispatches the Pallas kernel."""
+
+    @config_class
+    class Config(BaseLayer.Config):
+        input_dim: Required[int] = REQUIRED
+        eps: float = 1e-6
+        # "unit_offset": gemma-style (1 + scale) parameterization.
+        unit_offset: bool = False
+        # "ref" | "pallas" — kernel selection is a config choice (paper §4.2).
+        impl: str = "ref"
+
+    def _create_layer_parameter_specs(self):
+        cfg = self.config
+        init = zeros_init() if cfg.unit_offset else ones_init()
+        return {
+            "scale": ParameterSpec((cfg.input_dim,), cfg.param_dtype, init,
+                                   weight_decay_scale=0.0)
+        }
+
+    def forward(self, x: jax.Array) -> jax.Array:
+        cfg = self.config
+        scale = self.state["scale"]
+        if cfg.unit_offset:
+            scale = scale + 1.0
+        if cfg.impl == "pallas":
+            from repro.kernels import ops as kernel_ops
+
+            return kernel_ops.rmsnorm(x, scale.astype(jnp.float32), eps=cfg.eps)
+        xf = x.astype(jnp.float32)
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + cfg.eps)
+        y = y * scale.astype(jnp.float32)
+        return y.astype(x.dtype)

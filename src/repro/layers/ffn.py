@@ -1,0 +1,97 @@
+"""Feed-forward network with configurable (optionally gated) activations.
+
+``hidden_dim`` may be an int or a ``config_for_function`` of the input dim
+(the paper's ``scaled_hidden_dim(scale=8/3)`` partial-config idiom, §4.1).
+
+``activation`` follows the paper's tuple idiom: ``("linear", "nn.silu")``
+means two parallel input projections whose activated outputs are multiplied
+(SwiGLU); a single string is a plain MLP.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import (
+    REQUIRED,
+    ConfigBase,
+    FunctionConfigBase,
+    Required,
+    config_class,
+    config_for_function,
+)
+from repro.core.utils import PartitionSpecLike, remat_name
+from repro.layers.base import BaseLayer
+from repro.layers.basic import Linear, get_activation
+
+__all__ = ["FeedForward", "scaled_hidden_dim"]
+
+
+def scaled_hidden_dim(scale: float = 4.0, *, round_to: int = 1) -> FunctionConfigBase:
+    """Returns a config computing hidden_dim from input_dim at instantiation."""
+
+    def fn(scale: float, round_to: int):
+        def compute(input_dim: int) -> int:
+            hidden = int(input_dim * scale)
+            return ((hidden + round_to - 1) // round_to) * round_to
+
+        return compute
+
+    return config_for_function(fn).set(scale=scale, round_to=round_to)
+
+
+class FeedForward(BaseLayer):
+    @config_class
+    class Config(BaseLayer.Config):
+        input_dim: Required[int] = REQUIRED
+        # int, or a config_for_function(input_dim -> int).
+        hidden_dim: Required[Union[int, FunctionConfigBase]] = REQUIRED
+        output_dim: Optional[int] = None  # None -> input_dim
+        activation: Union[str, Tuple[str, ...]] = "nn.gelu"
+        bias: bool = False
+        # Projection template (DotGeneral-swap point, paper §4.2).
+        proj: ConfigBase = Linear.Config()
+        up_weight_partition: PartitionSpecLike = ("data", "model")
+        down_weight_partition: PartitionSpecLike = ("model", "data")
+        hidden_partition: PartitionSpecLike = (("pod", "data"), None, "model")
+
+    def __init__(self, cfg, *, parent=None):
+        super().__init__(cfg, parent=parent)
+        cfg = self.config
+        hidden = cfg.hidden_dim
+        if isinstance(hidden, FunctionConfigBase):
+            hidden = hidden.instantiate()(cfg.input_dim)
+            cfg.set(hidden_dim=hidden)
+        out_dim = cfg.output_dim if cfg.output_dim is not None else cfg.input_dim
+        cfg.set(output_dim=out_dim)
+        acts = cfg.activation if isinstance(cfg.activation, (tuple, list)) else (cfg.activation,)
+        up = cfg.proj.clone().set(
+            input_dim=cfg.input_dim, output_dim=hidden, bias=cfg.bias,
+            weight_partition=cfg.up_weight_partition, param_dtype=cfg.param_dtype)
+        for i in range(len(acts)):
+            self._add_child(f"up_proj{i}" if len(acts) > 1 else "up_proj", up.clone())
+        self._add_child(
+            "down_proj",
+            cfg.proj.clone().set(
+                input_dim=hidden, output_dim=out_dim, bias=cfg.bias,
+                weight_partition=cfg.down_weight_partition, param_dtype=cfg.param_dtype))
+
+    def forward(self, x: jax.Array) -> jax.Array:
+        cfg = self.config
+        acts = cfg.activation if isinstance(cfg.activation, (tuple, list)) else (cfg.activation,)
+        if len(acts) == 1:
+            h = get_activation(acts[0])(self.up_proj(x))
+        else:
+            h = None
+            for i, name in enumerate(acts):
+                proj = getattr(self, f"up_proj{i}")(x)
+                a = get_activation(name)(proj)
+                h = a if h is None else h * a
+        h = self._shard(h, cfg.hidden_partition)
+        h = remat_name(h, "ffn_hidden")
+        out = self.down_proj(h)
+        return remat_name(out, "ffn_out")

@@ -1,0 +1,243 @@
+"""Mixture-of-Experts FFN — the paper's flagship drop-in replacement (§2.1).
+
+GSPMD/GShard-style capacity-based token-choice top-k routing with einsum
+dispatch/combine, designed for expert parallelism over the "model" (or a
+dedicated "expert") mesh axis. The load-balance and router-z auxiliary
+losses are emitted through the InvocationContext (``add_module_output``),
+so NO ancestor layer — TransformerLayer, Repeat, Decoder, CausalLM — knows
+MoE exists. That is precisely the encapsulation property the paper measures
+with LoC-complexity.
+
+Interface-compatible with FeedForward: forward(x: (B,S,D)) -> (B,S,D).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import (
+    REQUIRED,
+    FunctionConfigBase,
+    Required,
+    config_class,
+)
+from repro.core.utils import PartitionSpecLike, remat_name
+from repro.layers.base import BaseLayer, ParameterSpec, fan_in_init, normal_init
+from repro.layers.basic import get_activation
+from repro.layers.ffn import FeedForward
+
+__all__ = ["MoELayer", "ResidualMoE", "TopKRouter"]
+
+
+class TopKRouter(BaseLayer):
+    """Token-choice top-k router with capacity-aware position assignment.
+
+    Returns (dispatch (G,S,E,C) bool-ish, combine (G,S,E,C) float) tensors.
+    Encapsulates: gating nonlinearity, top-k normalization, capacity logic,
+    aux losses. Swappable for other routing strategies by config.
+    """
+
+    @config_class
+    class Config(BaseLayer.Config):
+        input_dim: Required[int] = REQUIRED
+        num_experts: Required[int] = REQUIRED
+        top_k: int = 2
+        capacity_factor: float = 2.0
+        # mixtral renormalizes the top-k gate weights to sum to 1.
+        normalize_top_k: bool = True
+        load_balance_weight: float = 0.01
+        router_z_weight: float = 0.001
+        gate_weight_partition: PartitionSpecLike = ("data", None)
+        # (G, S, E, C) dispatch/combine sharding — set by the parent MoELayer
+        # so the fp32 routing tensors are expert-sharded from birth.
+        dispatch_partition: PartitionSpecLike = (("pod", "data"), None, "model", None)
+
+    def _create_layer_parameter_specs(self):
+        cfg = self.config
+        return {
+            "gate": ParameterSpec(
+                shape=(cfg.input_dim, cfg.num_experts),
+                dtype=cfg.param_dtype,
+                initializer=normal_init(0.02),
+                mesh_axes=cfg.gate_weight_partition,
+            )
+        }
+
+    def forward(self, x: jax.Array, *, capacity: int) -> Tuple[jax.Array, jax.Array]:
+        cfg = self.config
+        G, S, D = x.shape
+        E, K, C = cfg.num_experts, cfg.top_k, capacity
+        logits = (x.astype(jnp.float32) @ self.state["gate"].astype(jnp.float32))
+        probs = jax.nn.softmax(logits, axis=-1)  # (G,S,E)
+
+        top_vals, top_idx = jax.lax.top_k(probs, K)  # (G,S,K)
+        if cfg.normalize_top_k:
+            top_vals = top_vals / jnp.maximum(
+                jnp.sum(top_vals, -1, keepdims=True), 1e-9)
+
+        dp = tuple(cfg.dispatch_partition) if cfg.dispatch_partition else (None,) * 4
+        gse = (dp[0], dp[1], dp[2])
+
+        # Sequential capacity assignment: all k=0 choices first (GShard).
+        dispatch = jnp.zeros((G, S, E, C), jnp.float32)
+        combine = jnp.zeros((G, S, E, C), jnp.float32)
+        counts = jnp.zeros((G, E), jnp.float32)  # tokens already at each expert
+        frac_dispatched_first = None
+        for k in range(K):
+            mask_k = jax.nn.one_hot(top_idx[..., k], E, dtype=jnp.float32)  # (G,S,E)
+            mask_k = self._shard(mask_k, gse)
+            pos_k = jnp.cumsum(mask_k, axis=1) - 1.0 + counts[:, None, :]
+            keep_k = (pos_k < C) * mask_k  # (G,S,E)
+            counts = counts + jnp.sum(keep_k, axis=1)
+            oh_pos = jax.nn.one_hot(pos_k.astype(jnp.int32), C, dtype=jnp.float32)
+            oh_pos = self._shard(oh_pos, dp)
+            disp_k = keep_k[..., None] * oh_pos  # (G,S,E,C)
+            dispatch = self._shard(dispatch + disp_k, dp)
+            combine = self._shard(
+                combine + disp_k * top_vals[..., k][..., None, None], dp)
+            if k == 0:
+                frac_dispatched_first = jnp.mean(mask_k, axis=(0, 1))  # (E,)
+
+        # --- aux losses, emitted without ancestor knowledge ------------------
+        mean_prob = jnp.mean(probs, axis=(0, 1))  # (E,)
+        load_balance = E * jnp.sum(frac_dispatched_first * mean_prob)
+        z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+        aux = cfg.load_balance_weight * load_balance + cfg.router_z_weight * z_loss
+        self.add_module_output("aux_loss", aux)
+        self.add_summary("load_balance_loss", load_balance)
+        self.add_summary("router_z_loss", z_loss)
+        self.add_summary("expert_load_max", jnp.max(frac_dispatched_first) * E)
+        dispatched_frac = jnp.sum(dispatch) / (G * S * K)
+        self.add_summary("dispatched_fraction", dispatched_frac)  # 1 - drop rate
+        return dispatch, combine
+
+
+class MoELayer(BaseLayer):
+    """Drop-in FFN replacement. Expert weights (E, D, H) shard E over the
+    expert axis when divisible (expert parallelism); the dispatch einsums
+    become all-to-alls under GSPMD."""
+
+    @config_class
+    class Config(BaseLayer.Config):
+        input_dim: Required[int] = REQUIRED
+        hidden_dim: Required[Union[int, FunctionConfigBase]] = REQUIRED
+        num_experts: Required[int] = REQUIRED
+        top_k: int = 2
+        capacity_factor: float = 2.0
+        # GShard grouping: tokens are routed in groups of this size, bounding
+        # the (G, g, E, C) dispatch tensors to O(tokens * g) instead of
+        # O(tokens * S) when sequences are long (32k prefill!). None = one
+        # group per sequence (legacy behaviour).
+        group_size: Optional[int] = None
+        activation: Union[str, Tuple[str, ...]] = ("linear", "nn.silu")
+        router: TopKRouter.Config = TopKRouter.Config()
+        # (E, D, H): shard experts over "expert"/"model" when divisible; the
+        # config builders choose (see configs/common.py).
+        up_weight_partition: PartitionSpecLike = ("model", "data", None)
+        down_weight_partition: PartitionSpecLike = ("model", None, "data")
+        # (G, S, E, C) dispatch activations.
+        dispatch_partition: PartitionSpecLike = (("pod", "data"), None, "model", None)
+        # (E, G, C, D) expert-major activations.
+        expert_partition: PartitionSpecLike = ("model", ("pod", "data"), None, None)
+
+    def __init__(self, cfg, *, parent=None):
+        super().__init__(cfg, parent=parent)
+        cfg = self.config
+        hidden = cfg.hidden_dim
+        if isinstance(hidden, FunctionConfigBase):
+            cfg.set(hidden_dim=hidden.instantiate()(cfg.input_dim))
+        router = cfg.router.clone()
+        router.set(input_dim=cfg.input_dim, num_experts=cfg.num_experts,
+                   top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+                   dispatch_partition=cfg.dispatch_partition)
+        self._add_child("router", router)
+
+    def _create_layer_parameter_specs(self):
+        cfg = self.config
+        E, D, H = cfg.num_experts, cfg.input_dim, cfg.hidden_dim
+        acts = cfg.activation if isinstance(cfg.activation, (tuple, list)) else (cfg.activation,)
+        specs = {}
+        for i in range(len(acts)):
+            name = f"wi_{i}" if len(acts) > 1 else "wi"
+            specs[name] = ParameterSpec(
+                shape=(E, D, H), dtype=cfg.param_dtype,
+                initializer=fan_in_init(fan_in_axes=(-2,)),
+                mesh_axes=cfg.up_weight_partition)
+        specs["wo"] = ParameterSpec(
+            shape=(E, H, D), dtype=cfg.param_dtype,
+            initializer=fan_in_init(fan_in_axes=(-2,)),
+            mesh_axes=cfg.down_weight_partition)
+        return specs
+
+    def _capacity(self, S: int) -> int:
+        cfg = self.config
+        per_expert = (S * cfg.top_k) / cfg.num_experts
+        return max(4, int(per_expert * cfg.capacity_factor + 0.5))
+
+    def forward(self, x: jax.Array) -> jax.Array:
+        cfg = self.config
+        B0, S0, D = x.shape
+        g = cfg.group_size
+        if g and S0 > g and S0 % g == 0:
+            x = x.reshape(B0 * (S0 // g), g, D)
+        B, S, D = x.shape
+        C = self._capacity(S)
+        acts = cfg.activation if isinstance(cfg.activation, (tuple, list)) else (cfg.activation,)
+
+        dispatch, combine = self.router(x, capacity=C)
+        dispatch = self._shard(dispatch.astype(jnp.bfloat16), cfg.dispatch_partition)
+        combine = self._shard(combine.astype(x.dtype), cfg.dispatch_partition)
+        dispatch = remat_name(dispatch, "moe_dispatch")
+
+        # Dispatch tokens to experts: (E, G, C, D). Under expert parallelism
+        # this einsum lowers to an all-to-all over the expert axis.
+        xe = jnp.einsum("gsec,gsd->egcd", dispatch.astype(x.dtype), x)
+        xe = self._shard(xe, cfg.expert_partition)
+
+        # Per-expert FFN (optionally gated).
+        if len(acts) == 1:
+            h = get_activation(acts[0])(
+                jnp.einsum("egcd,edh->egch", xe, self.state["wi"].astype(x.dtype)))
+        else:
+            h = None
+            for i, name in enumerate(acts):
+                w = self.state[f"wi_{i}"].astype(x.dtype)
+                a = get_activation(name)(jnp.einsum("egcd,edh->egch", xe, w))
+                h = a if h is None else h * a
+        ye = jnp.einsum("egch,ehd->egcd", h, self.state["wo"].astype(x.dtype))
+        ye = self._shard(ye, cfg.expert_partition)
+
+        # Combine back to token order.
+        y = jnp.einsum("gsec,egcd->gsd", combine, ye)
+        if y.shape[0] != B0:
+            y = y.reshape(B0, S0, D)
+        return remat_name(y, "ffn_out")
+
+
+class ResidualMoE(BaseLayer):
+    """Arctic-style: a small dense FFN in parallel with the MoE FFN.
+
+    Pure composition: both children keep their own encapsulated configs.
+    """
+
+    @config_class
+    class Config(BaseLayer.Config):
+        input_dim: Required[int] = REQUIRED
+        dense: FeedForward.Config = FeedForward.Config()
+        moe: MoELayer.Config = MoELayer.Config()
+
+    def __init__(self, cfg, *, parent=None):
+        super().__init__(cfg, parent=parent)
+        dense = cfg.dense.clone()
+        moe = cfg.moe.clone()
+        for c in (dense, moe):
+            if not c.input_dim:
+                c.set(input_dim=cfg.input_dim)
+        self._add_child("dense", dense)
+        self._add_child("moe", moe)
+
+    def forward(self, x: jax.Array) -> jax.Array:
+        return self.dense(x) + self.moe(x)

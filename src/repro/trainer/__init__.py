@@ -1,0 +1,2 @@
+from repro.trainer.learner import Learner, aggregate_aux_losses
+from repro.trainer.trainer import SpmdTrainer

@@ -1,0 +1,84 @@
+"""Learner: turns (grads, aux outputs) into parameter updates.
+
+The Learner aggregates auxiliary losses (e.g. MoE load-balance) from the
+OutputCollection *by key pattern* — neither the model nor any layer passes
+them explicitly (InvocationContext encapsulation, §4.3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import (
+    REQUIRED,
+    FunctionConfigBase,
+    Required,
+    config_class,
+    config_for_function,
+)
+from repro.core.module import Module, OutputCollection, no_context
+from repro.layers.base import ParameterSpec
+from repro.trainer import optimizers as opt_lib
+
+__all__ = ["Learner", "aggregate_aux_losses"]
+
+
+def aggregate_aux_losses(collection: OutputCollection,
+                         pattern: str = r".*/aux_loss$") -> jax.Array:
+    """Sums every module output matching ``pattern`` (stacked leaves from
+    scanned layers sum over all elements)."""
+    rx = re.compile(pattern)
+    total = jnp.zeros((), jnp.float32)
+    for key, value in collection.module_outputs.items():
+        if rx.match(key):
+            total = total + jnp.sum(value.astype(jnp.float32))
+    return total
+
+
+class Learner(Module):
+    @config_class
+    class Config(Module.Config):
+        # A config_for_function over an optimizer factory (e.g. adamw).
+        optimizer: Required[FunctionConfigBase] = REQUIRED
+        aux_loss_weight: float = 1.0
+        aux_loss_pattern: str = r".*/aux_loss$"
+
+    def __init__(self, cfg, *, parent=None):
+        super().__init__(cfg, parent=parent)
+        self._tx: Optional[opt_lib.GradientTransformation] = None
+
+    # Structural (no InvocationContext): used by trainer at setup time.
+    @no_context
+    def build(self, param_specs: Optional[Any] = None) -> opt_lib.GradientTransformation:
+        cfg = self.config.optimizer.clone()
+        if param_specs is not None and "weight_decay_scales" in cfg.keys():
+            scales = jax.tree.map(
+                lambda s: s.weight_decay_scale, param_specs,
+                is_leaf=lambda s: isinstance(s, ParameterSpec))
+            if isinstance(cfg.weight_decay_scales, type(REQUIRED)) or \
+                    cfg.weight_decay_scales is None:
+                cfg.set(weight_decay_scales=scales)
+        self._tx = cfg.instantiate()
+        return self._tx
+
+    @property
+    def tx(self) -> opt_lib.GradientTransformation:
+        assert self._tx is not None, "call learner.build() first"
+        return self._tx
+
+    @no_context
+    def init_state(self, params):
+        return self.tx.init(params)
+
+    @no_context
+    def apply_updates(self, grads, opt_state, params):
+        updates, new_opt_state = self.tx.update(grads, opt_state, params)
+        new_params = jax.tree.map(
+            lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(p.dtype),
+            params, updates)
+        return new_params, new_opt_state

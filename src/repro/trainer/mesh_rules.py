@@ -1,0 +1,148 @@
+"""Mesh rules: instance-type regex -> config modifiers (paper §4.2, App. A).
+
+A mesh rule maps an accelerator instance type (e.g. "tpu-v5e-256-*",
+"gpu-H100-*", "cpu-*") to a list of ConfigModifiers applied to the trainer
+config. Per-target parallelism/remat/kernel/quantization choices therefore
+live in ~10 lines of config, with zero model-code changes — the paper's
+heterogeneous-hardware mechanism.
+
+Modifiers exploit the config system's traversal: e.g. RematPolicyModifier
+rewrites the ``remat_policy`` of every Repeat config wherever it appears in
+the (arbitrarily deep) tree.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, List, Optional, Sequence, Tuple
+
+from repro.core.config import REQUIRED, ConfigBase, Required, config_class, visit_config
+from repro.core.module import Module, no_context
+
+__all__ = [
+    "ConfigModifier",
+    "MeshShapeModifier",
+    "RematPolicyModifier",
+    "AttentionImplModifier",
+    "OffloadOptimizerModifier",
+    "GradAccumModifier",
+    "KernelBlockModifier",
+    "apply_mesh_rules",
+]
+
+
+class ConfigModifier(Module):
+    """Base: subclasses implement apply(trainer_cfg) -> trainer_cfg."""
+
+    @no_context
+    def apply(self, trainer_cfg: ConfigBase) -> ConfigBase:
+        raise NotImplementedError
+
+
+class MeshShapeModifier(ConfigModifier):
+    @config_class
+    class Config(ConfigModifier.Config):
+        mesh_shape: Required[Tuple[int, ...]] = REQUIRED
+        mesh_axis_names: Required[Tuple[str, ...]] = REQUIRED
+
+    @no_context
+    def apply(self, trainer_cfg):
+        trainer_cfg.set(mesh_shape=self.config.mesh_shape,
+                        mesh_axis_names=self.config.mesh_axis_names)
+        return trainer_cfg
+
+
+class RematPolicyModifier(ConfigModifier):
+    """Sets remat_policy on every config that has one (Repeat stacks)."""
+
+    @config_class
+    class Config(ConfigModifier.Config):
+        policy: Optional[str] = "full"
+
+    @no_context
+    def apply(self, trainer_cfg):
+        policy = self.config.policy
+
+        def visit(path, cfg):
+            if "remat_policy" in cfg.keys():
+                cfg.set(remat_policy=policy)
+
+        visit_config(trainer_cfg, visit)
+        return trainer_cfg
+
+
+class AttentionImplModifier(ConfigModifier):
+    """Kernel selection is config (paper: cuDNN / NKI / SplashAttention /
+    Pallas per backend)."""
+
+    @config_class
+    class Config(ConfigModifier.Config):
+        impl: str = "blockwise"  # ref | blockwise | flash
+        kernel_interpret: bool = False
+
+    @no_context
+    def apply(self, trainer_cfg):
+        c = self.config
+
+        def visit(path, cfg):
+            if "impl" in cfg.keys() and "kernel_interpret" in cfg.keys():
+                cfg.set(impl=c.impl, kernel_interpret=c.kernel_interpret)
+
+        visit_config(trainer_cfg, visit)
+        return trainer_cfg
+
+
+class OffloadOptimizerModifier(ConfigModifier):
+    @config_class
+    class Config(ConfigModifier.Config):
+        enabled: bool = True
+
+    @no_context
+    def apply(self, trainer_cfg):
+        trainer_cfg.set(offload_optimizer_state=self.config.enabled)
+        return trainer_cfg
+
+
+class GradAccumModifier(ConfigModifier):
+    @config_class
+    class Config(ConfigModifier.Config):
+        steps: Required[int] = REQUIRED
+
+    @no_context
+    def apply(self, trainer_cfg):
+        trainer_cfg.set(grad_accum_steps=self.config.steps)
+        return trainer_cfg
+
+
+class KernelBlockModifier(ConfigModifier):
+    """Tunes attention blockwise chunk size (per-target tiling)."""
+
+    @config_class
+    class Config(ConfigModifier.Config):
+        chunk_size: Required[int] = REQUIRED
+
+    @no_context
+    def apply(self, trainer_cfg):
+        c = self.config
+
+        def visit(path, cfg):
+            if "blockwise_chunk_size" in cfg.keys():
+                cfg.set(blockwise_chunk_size=c.chunk_size)
+
+        visit_config(trainer_cfg, visit)
+        return trainer_cfg
+
+
+MeshRules = Sequence[Tuple[str, Sequence[ConfigBase]]]
+
+
+def apply_mesh_rules(trainer_cfg: ConfigBase, *, instance_type: str,
+                     rules: MeshRules) -> ConfigBase:
+    """Applies the first rule whose regex matches ``instance_type``."""
+    for pattern, modifier_cfgs in rules:
+        if re.fullmatch(pattern, instance_type) or re.match(pattern, instance_type):
+            for mc in modifier_cfgs:
+                modifier = mc.instantiate()
+                trainer_cfg = modifier.apply(trainer_cfg)
+            return trainer_cfg
+    return trainer_cfg

@@ -1,0 +1,207 @@
+"""Optimizers & LR schedules in pure JAX (no optax in this environment).
+
+Minimal GradientTransformation calculus (init/update pairs + chain), exposed
+as plain functions so they compose with ``config_for_function`` — the paper's
+3rd-party-interop mechanism is exercised on our own optimizer library.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "GradientTransformation",
+    "chain",
+    "clip_by_global_norm",
+    "scale_by_adam",
+    "add_decayed_weights",
+    "scale_by_schedule",
+    "scale",
+    "sgd",
+    "adamw",
+    "linear_warmup_cosine",
+    "constant_schedule",
+    "global_norm",
+]
+
+
+class GradientTransformation(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]  # (grads, state, params)
+
+
+def chain(*transforms: GradientTransformation) -> GradientTransformation:
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(grads, state, params):
+        new_state = []
+        for t, s in zip(transforms, state):
+            grads, s = t.update(grads, s, params)
+            new_state.append(s)
+        return grads, tuple(new_state)
+
+    return GradientTransformation(init, update)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransformation:
+    def init(params):
+        return ()
+
+    def update(grads, state, params):
+        norm = global_norm(grads)
+        factor = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+        return jax.tree.map(lambda g: g * factor.astype(g.dtype), grads), state
+
+    return GradientTransformation(init, update)
+
+
+class AdamState(NamedTuple):
+    count: jax.Array
+    mu: Any
+    nu: Any
+
+
+def scale_by_adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+                  moment_dtype=jnp.float32) -> GradientTransformation:
+    """moment_dtype=bf16 halves optimizer-state HBM (config-driven memory
+    lever for >=100B models on v5e; composes with host offload on TPU)."""
+
+    def init(params):
+        mu = jax.tree.map(lambda p: jnp.zeros_like(p, moment_dtype), params)
+        nu = jax.tree.map(lambda p: jnp.zeros_like(p, moment_dtype), params)
+        return AdamState(count=jnp.zeros((), jnp.int32), mu=mu, nu=nu)
+
+    def update(grads, state, params):
+        count = state.count + 1
+        mu = jax.tree.map(
+            lambda m, g: (b1 * m.astype(jnp.float32) +
+                          (1 - b1) * g.astype(jnp.float32)).astype(moment_dtype),
+            state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: (b2 * v.astype(jnp.float32) +
+                          (1 - b2) * jnp.square(g.astype(jnp.float32))).astype(moment_dtype),
+            state.nu, grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+        updates = jax.tree.map(
+            lambda m, v: (m.astype(jnp.float32) / c1) /
+            (jnp.sqrt(v.astype(jnp.float32) / c2) + eps), mu, nu)
+        return updates, AdamState(count=count, mu=mu, nu=nu)
+
+    return GradientTransformation(init, update)
+
+
+def add_decayed_weights(weight_decay: float, scales: Optional[Any] = None
+                        ) -> GradientTransformation:
+    """scales: optional tree (matching params) of per-param decay multipliers
+    (from ParameterSpec.weight_decay_scale; 0 disables decay for biases/norms)."""
+
+    def init(params):
+        return ()
+
+    def update(grads, state, params):
+        assert params is not None, "add_decayed_weights needs params"
+        if scales is None:
+            new = jax.tree.map(
+                lambda g, p: g + weight_decay * p.astype(g.dtype), grads, params)
+        else:
+            new = jax.tree.map(
+                lambda g, p, s: g + weight_decay * s * p.astype(g.dtype),
+                grads, params, scales)
+        return new, state
+
+    return GradientTransformation(init, update)
+
+
+def scale_by_schedule(schedule: Callable[[jax.Array], jax.Array]
+                      ) -> GradientTransformation:
+    def init(params):
+        return jnp.zeros((), jnp.int32)
+
+    def update(grads, count, params):
+        factor = schedule(count)
+        return jax.tree.map(lambda g: g * factor.astype(g.dtype), grads), count + 1
+
+    return GradientTransformation(init, update)
+
+
+def scale(factor: float) -> GradientTransformation:
+    def init(params):
+        return ()
+
+    def update(grads, state, params):
+        return jax.tree.map(lambda g: g * factor, grads), state
+
+    return GradientTransformation(init, update)
+
+
+# ------------------------------- schedules ----------------------------------
+
+
+def constant_schedule(value: float = 1.0):
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def linear_warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                         end_lr_ratio: float = 0.1):
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        progress = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                            0.0, 1.0)
+        cos = peak_lr * (end_lr_ratio + (1 - end_lr_ratio) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * progress)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return schedule
+
+
+# ------------------------------ optimizers ----------------------------------
+
+
+def sgd(learning_rate: float = 1e-2, momentum: float = 0.0
+        ) -> GradientTransformation:
+    if momentum == 0.0:
+        return chain(scale(-learning_rate))
+
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(grads, vel, params):
+        vel = jax.tree.map(lambda v, g: momentum * v + g.astype(jnp.float32), vel, grads)
+        return jax.tree.map(lambda v: -learning_rate * v, vel), vel
+
+    return GradientTransformation(init, update)
+
+
+def adamw(
+    learning_rate: Optional[Callable] = None,
+    peak_lr: float = 1e-3,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    weight_decay_scales: Optional[Any] = None,
+    max_grad_norm: Optional[float] = 1.0,
+    moment_dtype=jnp.float32,
+) -> GradientTransformation:
+    """AdamW with optional clipping + schedule; final update is negative."""
+    schedule = learning_rate or constant_schedule(peak_lr)
+    parts = []
+    if max_grad_norm is not None:
+        parts.append(clip_by_global_norm(max_grad_norm))
+    parts.append(scale_by_adam(b1=b1, b2=b2, eps=eps, moment_dtype=moment_dtype))
+    if weight_decay:
+        parts.append(add_decayed_weights(weight_decay, weight_decay_scales))
+    parts.append(scale_by_schedule(lambda step: -schedule(step)))
+    return chain(*parts)

@@ -1,0 +1,67 @@
+"""Rematerialization policies over *tagged* activations (paper §4.2).
+
+Layers tag remat points with ``checkpoint_name`` (e.g. "attn_out",
+"ffn_hidden", "q_proj", "kv_proj", "ffn_out", "moe_dispatch"). A policy spec
+string — carried in configs, hence swappable by mesh rules — selects what to
+save, offload, or recompute:
+
+  "full"                      recompute everything (minimum HBM)
+  "none"                      no remat
+  "save:attn_out,ffn_out"     save listed names, recompute the rest
+  "offload:ffn_hidden"        offload listed names to host, recompute rest
+  "save_dots"                 save all matmul outputs (XLA heuristic policy)
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+
+__all__ = ["policy_from_spec", "KNOWN_TAGS"]
+
+# The tag vocabulary the layer library emits (kept in one place so configs
+# and tests can validate against it).
+KNOWN_TAGS = (
+    "q_proj",
+    "kv_proj",
+    "attn_out",
+    "ffn_hidden",
+    "ffn_out",
+    "moe_dispatch",
+    "mixer_out",
+)
+
+
+def policy_from_spec(spec: Optional[str]) -> Optional[Callable]:
+    """Returns a jax.checkpoint policy (None = save everything is NOT
+    expressible — None here means 'recompute everything', i.e. plain remat)."""
+    if spec is None or spec == "full":
+        return None  # jax.checkpoint default: recompute everything
+    if spec == "none":
+        return jax.checkpoint_policies.everything_saveable
+    if spec == "save_dots":
+        return jax.checkpoint_policies.dots_saveable
+    if spec.startswith("save:"):
+        names = tuple(n for n in spec[len("save:"):].split(",") if n)
+        return jax.checkpoint_policies.save_only_these_names(*names)
+    if spec.startswith("offload:"):
+        names = tuple(n for n in spec[len("offload:"):].split(",") if n)
+        return jax.checkpoint_policies.save_and_offload_only_these_names(
+            names_which_can_be_saved=(),
+            names_which_can_be_offloaded=names,
+            offload_src="device",
+            offload_dst="pinned_host",
+        )
+    if spec.startswith("save_offload:"):
+        # "save_offload:<saved>;<offloaded>"
+        saved_s, _, off_s = spec[len("save_offload:"):].partition(";")
+        saved = tuple(n for n in saved_s.split(",") if n)
+        off = tuple(n for n in off_s.split(",") if n)
+        return jax.checkpoint_policies.save_and_offload_only_these_names(
+            names_which_can_be_saved=saved,
+            names_which_can_be_offloaded=off,
+            offload_src="device",
+            offload_dst="pinned_host",
+        )
+    raise ValueError(f"Unknown remat policy spec {spec!r}")

@@ -1,0 +1,334 @@
+"""SpmdTrainer: config-driven distributed training loop (paper §3–§5).
+
+Everything is a replaceable child module: model, learner, input pipeline,
+checkpointer. Parallelism is configured — mesh shape + axis names + the
+partition specs the layers already carry — never coded (§4.2). The exact
+``train_step`` built here is what the AOT dry-run lowers, fulfilling the
+paper's "a program that AOT-compiles will run at scale" property.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core.config import REQUIRED, ConfigBase, Required, config_class
+from repro.core.module import Module, functional, no_context
+from repro.core.utils import (
+    named_sharding,
+    resolve_spec,
+    set_mesh,
+    tree_param_count,
+)
+from repro.data.input import SyntheticInput
+from repro.layers.base import ParameterSpec
+from repro.trainer.learner import Learner, aggregate_aux_losses
+from repro.trainer.optimizers import global_norm
+
+__all__ = ["SpmdTrainer", "TrainState"]
+
+TrainState = Dict[str, Any]  # {"step", "prng_key", "params", "opt_state"}
+
+
+def opt_state_shardings(opt_state_shapes: Any, params_structure,
+                        param_shardings: Any, mesh) -> Any:
+    """Shardings for an optimizer state pytree: any subtree whose structure
+    matches the params tree inherits the param shardings; other leaves are
+    replicated (counts, schedules)."""
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    replicated = NamedSharding(mesh, PartitionSpec()) if mesh else None
+
+    def rec(node):
+        if jax.tree.structure(node) == params_structure:
+            return param_shardings
+        if isinstance(node, tuple) and type(node) is not tuple:  # NamedTuple
+            return type(node)(*[rec(x) for x in node])
+        if isinstance(node, tuple):
+            return tuple(rec(x) for x in node)
+        if isinstance(node, list):
+            return [rec(x) for x in node]
+        if isinstance(node, dict):
+            return {k: rec(v) for k, v in node.items()}
+        return replicated
+
+    return rec(opt_state_shapes)
+
+
+class SpmdTrainer(Module):
+    @config_class
+    class Config(Module.Config):
+        model: Required[ConfigBase] = REQUIRED
+        learner: Learner.Config = Learner.Config()
+        input: SyntheticInput.Config = SyntheticInput.Config()
+        checkpointer: Optional[Checkpointer.Config] = None
+        # --- parallelism is configuration (paper §4.2) ---
+        mesh_shape: Tuple[int, ...] = (1,)
+        mesh_axis_names: Tuple[str, ...] = ("data",)
+        batch_partition: Any = (("pod", "data"),)  # applied to dim 0 of inputs
+        # --- loop ---
+        max_steps: int = 100
+        seed: int = 0
+        log_every_n: int = 10
+        checkpoint_every_n: int = 0
+        # Gradient accumulation (microbatching) — memory lever.
+        grad_accum_steps: int = 1
+        # Optimizer-state host offload (TPU feature; see DESIGN.md for the
+        # CPU dry-run substitution).
+        offload_optimizer_state: bool = False
+        # Runtime resiliency (paper §5).
+        watchdog_timeout_s: Optional[float] = None
+        sdc_check_every_n: int = 0
+
+    def __init__(self, cfg, *, parent=None):
+        super().__init__(cfg, parent=parent)
+        self._add_child("model", cfg.model)
+        self._add_child("learner", cfg.learner)
+        self._add_child("input", cfg.input)
+        if cfg.checkpointer is not None:
+            self._add_child("checkpointer", cfg.checkpointer)
+        self._mesh = None
+        self._jit_step = None
+
+    # ----------------------------------------------------------------- setup
+
+    @no_context
+    def build_mesh(self):
+        cfg = self.config
+        if self._mesh is None:
+            n = int(np.prod(cfg.mesh_shape))
+            if n > len(jax.devices()):
+                raise RuntimeError(
+                    f"mesh {cfg.mesh_shape} needs {n} devices, "
+                    f"have {len(jax.devices())}")
+            self._mesh = jax.make_mesh(
+                tuple(cfg.mesh_shape), tuple(cfg.mesh_axis_names),
+                axis_types=(jax.sharding.AxisType.Auto,) * len(cfg.mesh_shape))
+        return self._mesh
+
+    @no_context
+    def param_specs(self):
+        return self.model.create_parameter_specs_recursively()
+
+    @no_context
+    def param_shardings(self, mesh=None):
+        mesh = mesh or self.build_mesh()
+        specs = self.param_specs()
+        return jax.tree.map(
+            lambda s: named_sharding(s.mesh_axes, mesh), specs,
+            is_leaf=lambda s: isinstance(s, ParameterSpec))
+
+    @no_context
+    def batch_shardings(self, batch_like, mesh=None):
+        mesh = mesh or self.build_mesh()
+        cfg = self.config
+
+        def shard(x):
+            ndim = len(x.shape)
+            spec = tuple(cfg.batch_partition) + (None,) * (ndim - len(cfg.batch_partition))
+            return named_sharding(spec[:ndim], mesh)
+
+        return jax.tree.map(shard, batch_like)
+
+    # ------------------------------------------------------------------ state
+
+    @no_context
+    def init_state(self, prng_key: Optional[jax.Array] = None) -> TrainState:
+        cfg = self.config
+        if prng_key is None:
+            prng_key = jax.random.PRNGKey(cfg.seed)
+        self.learner.build(self.param_specs())
+        params = self.model.initialize_parameters_recursively(prng_key)
+        opt_state = self.learner.init_state(params)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "prng_key": prng_key,
+            "params": params,
+            "opt_state": opt_state,
+        }
+
+    @no_context
+    def state_shardings(self, state_shapes: TrainState, mesh=None):
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        mesh = mesh or self.build_mesh()
+        cfg = self.config
+        p_shardings = self.param_shardings(mesh)
+        opt_sh = opt_state_shardings(
+            state_shapes["opt_state"], jax.tree.structure(state_shapes["params"]),
+            p_shardings, mesh)
+        if cfg.offload_optimizer_state:
+            opt_sh = jax.tree.map(
+                lambda s: s.with_memory_kind("pinned_host") if s is not None else s,
+                opt_sh)
+        rep = NamedSharding(mesh, PartitionSpec())
+        return {
+            "step": rep,
+            "prng_key": rep,
+            "params": p_shardings,
+            "opt_state": opt_sh,
+        }
+
+    # ------------------------------------------------------------- train step
+
+    @no_context
+    def make_train_step(self) -> Callable[[TrainState, Dict[str, Any]],
+                                          Tuple[TrainState, Dict[str, Any]]]:
+        cfg = self.config
+        model = self.model
+        learner = self.learner
+        aux_weight = cfg.learner.aux_loss_weight
+        aux_pattern = cfg.learner.aux_loss_pattern
+        accum = cfg.grad_accum_steps
+
+        def loss_fn(params, batch, step_key):
+            (loss, _aux), col = functional(
+                model, state=params, inputs=(batch,), prng_key=step_key,
+                is_training=True)
+            aux_total = aggregate_aux_losses(col, aux_pattern)
+            total = loss + aux_weight * aux_total
+            return total, {"loss": loss, "aux_loss": aux_total}
+
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+        def compute_grads(params, batch, step_key):
+            if accum <= 1:
+                (total, parts), grads = grad_fn(params, batch, step_key)
+                return total, parts, grads
+
+            def microbatch(carry, mb):
+                acc_grads, acc_total, acc_loss, acc_aux = carry
+                mb_key = jax.random.fold_in(step_key, mb["_idx"])
+                (total, parts), grads = grad_fn(params, {k: v for k, v in mb.items()
+                                                         if k != "_idx"}, mb_key)
+                acc_grads = jax.tree.map(jnp.add, acc_grads, grads)
+                return (acc_grads, acc_total + total, acc_loss + parts["loss"],
+                        acc_aux + parts["aux_loss"]), None
+
+            split = {k: v.reshape((accum, v.shape[0] // accum) + v.shape[1:])
+                     for k, v in batch.items()}
+            split["_idx"] = jnp.arange(accum)
+            zero_grads = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, total, loss, aux), _ = jax.lax.scan(
+                microbatch, (zero_grads, 0.0, 0.0, 0.0), split)
+            inv = 1.0 / accum
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            return total * inv, {"loss": loss * inv, "aux_loss": aux * inv}, grads
+
+        def train_step(state: TrainState, batch: Dict[str, Any]):
+            step_key = jax.random.fold_in(state["prng_key"], state["step"])
+            total, parts, grads = compute_grads(state["params"], batch, step_key)
+            new_params, new_opt = learner.apply_updates(
+                grads, state["opt_state"], state["params"])
+            metrics = {
+                "total_loss": total,
+                "grad_norm": global_norm(grads),
+                **parts,
+            }
+            new_state = {
+                "step": state["step"] + 1,
+                "prng_key": state["prng_key"],
+                "params": new_params,
+                "opt_state": new_opt,
+            }
+            return new_state, metrics
+
+        return train_step
+
+    # -------------------------------------------------------------------- run
+
+    @no_context
+    def run(self, num_steps: Optional[int] = None) -> Dict[str, Any]:
+        cfg = self.config
+        num_steps = num_steps or cfg.max_steps
+        mesh = self.build_mesh()
+        with set_mesh(mesh):
+            state = self.init_state()
+            state_shapes = jax.eval_shape(lambda: state)
+            shardings = self.state_shardings(state_shapes, mesh)
+            state = jax.device_put(state, shardings)
+
+            sample = self.input.make_batch(0)
+            batch_sh = self.batch_shardings(sample, mesh)
+            step_fn = jax.jit(
+                self.make_train_step(),
+                in_shardings=(shardings, batch_sh),
+                out_shardings=(shardings, None),
+                donate_argnums=(0,),
+            )
+
+            start_step = 0
+            if cfg.checkpointer is not None:
+                latest = self.checkpointer.latest_step()
+                if latest is not None:
+                    state = self.checkpointer.restore(latest, like=state)
+                    state = jax.device_put(state, shardings)
+                    start_step = latest
+
+            watchdog = _Watchdog(cfg.watchdog_timeout_s)
+            history = []
+            it = self.input.batches()
+            t0 = time.time()
+            last_metrics = {}
+            for step in range(start_step, num_steps):
+                batch = next(it)
+                batch = jax.device_put(batch, batch_sh)
+                watchdog.beat(step)
+                state, metrics = step_fn(state, batch)
+                if cfg.sdc_check_every_n and step % cfg.sdc_check_every_n == 0:
+                    self._sdc_check(batch)
+                if step % cfg.log_every_n == 0 or step == num_steps - 1:
+                    m = {k: float(v) for k, v in metrics.items()}
+                    m["step"] = step
+                    m["steps_per_s"] = (step - start_step + 1) / (time.time() - t0)
+                    history.append(m)
+                    last_metrics = m
+                if (cfg.checkpointer is not None and cfg.checkpoint_every_n
+                        and (step + 1) % cfg.checkpoint_every_n == 0):
+                    self.checkpointer.save(step + 1, jax.device_get(state))
+            watchdog.stop()
+            if cfg.checkpointer is not None:
+                self.checkpointer.wait()
+            return {"state": state, "history": history, "final": last_metrics,
+                    "num_params": tree_param_count(state["params"])}
+
+    def _sdc_check(self, batch):
+        """Paper §5: repeat a computation and compare for silent corruption."""
+        x = batch[sorted(batch.keys())[0]]
+        f = jax.jit(lambda a: jnp.sum(a.astype(jnp.float32) * 1.000001))
+        r1, r2 = f(x), f(x)
+        if not np.allclose(np.asarray(r1), np.asarray(r2)):
+            raise RuntimeError(f"SDC detected: {r1} != {r2}")
+
+
+class _Watchdog:
+    """Warns (or raises) when a training step exceeds the timeout (§5)."""
+
+    def __init__(self, timeout_s: Optional[float]):
+        import threading
+
+        self.timeout = timeout_s
+        self._timer: Optional[threading.Timer] = None
+        self.fired = []
+
+    def beat(self, step: int):
+        import threading
+
+        if self.timeout is None:
+            return
+        self.stop()
+        self._timer = threading.Timer(
+            self.timeout, lambda: self.fired.append(step) or print(
+                f"[watchdog] step {step} exceeded {self.timeout}s"))
+        self._timer.daemon = True
+        self._timer.start()
+
+    def stop(self):
+        if self._timer is not None:
+            self._timer.cancel()
+            self._timer = None

@@ -1,0 +1,158 @@
+"""Per-architecture smoke tests (assignment requirement).
+
+Each assigned arch instantiates a REDUCED variant of the same family
+(2 layers / 1 block, d_model <= 512, <= 4 experts) and runs one forward +
+one train step on CPU, asserting output shapes and no NaNs. Decode-capable
+archs also run one serve_step.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.configs.common import SHAPES
+from repro.core.module import functional
+
+ARCHS = registry.ASSIGNED_ARCHS
+
+
+def _smoke_batch(spec, B=2, S=16, rng_seed=0):
+    rng = np.random.default_rng(rng_seed)
+    smoke_cfg = spec.make_smoke()
+    vocab = smoke_cfg.decoder.vocab_size
+    dim = smoke_cfg.decoder.dim
+    if spec.modality == "audio":
+        return {
+            "input_embeddings": jnp.asarray(
+                rng.standard_normal((B, S, dim)), jnp.float32),
+            "mask_positions": jnp.asarray(rng.random((B, S)) < 0.3),
+            "labels": jnp.asarray(rng.integers(0, vocab, (B, S)), jnp.int32),
+        }
+    batch = {
+        "input_ids": jnp.asarray(rng.integers(0, vocab, (B, S)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, vocab, (B, S)), jnp.int32),
+    }
+    if spec.modality == "vlm":
+        P = 4
+        batch["input_embeddings"] = jnp.asarray(
+            rng.standard_normal((B, P, dim)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_shapes(arch):
+    spec = registry.get_spec(arch)
+    cfg = spec.make_smoke()
+    assert cfg.decoder.dim <= 512
+    model = cfg.instantiate()
+    params = model.initialize_parameters_recursively(jax.random.PRNGKey(0))
+    batch = _smoke_batch(spec)
+    (loss, aux), col = functional(model, state=params, inputs=(batch,),
+                                  is_training=True,
+                                  prng_key=jax.random.PRNGKey(1))
+    assert jnp.isfinite(loss), f"{arch}: non-finite loss"
+    B, S = batch["labels"].shape
+    vocab = cfg.decoder.vocab_size
+    assert aux["logits"].shape == (B, S, vocab)
+    assert bool(jnp.isfinite(aux["logits"]).all()), f"{arch}: NaN logits"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    """One real optimizer step through the SpmdTrainer substrate."""
+    from repro.core.config import config_for_function
+    from repro.trainer import optimizers as opt_lib
+    from repro.trainer.trainer import SpmdTrainer
+
+    spec = registry.get_spec(arch)
+    cfg = SpmdTrainer.default_config().set(
+        name="t", model=spec.make_smoke(), max_steps=2, log_every_n=1, seed=0)
+    smoke = spec.make_smoke()
+    task = {"audio": "audio", "vlm": "vlm"}.get(spec.modality, "lm")
+    cfg.input.set(task=task, vocab_size=smoke.decoder.vocab_size, seq_len=16,
+                  global_batch_size=2, model_dim=smoke.decoder.dim,
+                  num_patches=4)
+    cfg.learner.optimizer = config_for_function(opt_lib.adamw).set(peak_lr=1e-3)
+    result = cfg.instantiate().run()
+    assert np.isfinite(result["final"]["loss"]), f"{arch}: train step NaN"
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS
+                                  if "decode_32k" not in
+                                  registry.get_spec(a).skip_shapes])
+def test_smoke_serve_step(arch):
+    """prefill + one-token decode on the reduced variant."""
+    spec = registry.get_spec(arch)
+    cfg = spec.make_smoke()
+    model = cfg.instantiate()
+    params = model.initialize_parameters_recursively(jax.random.PRNGKey(0))
+    vocab = cfg.decoder.vocab_size
+    B, S = 2, 8
+    ids = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, vocab)
+    cache, _ = functional(model, state=params, inputs=(B, 32),
+                          method="init_states")
+    (cache, logits), _ = functional(
+        model, state=params, inputs={"state": cache, "input_ids": ids},
+        method="prefill")
+    assert logits.shape == (B, S, vocab)
+    (cache, step_logits), _ = functional(
+        model, state=params,
+        inputs={"state": cache, "ids_step": ids[:, -1:]},
+        method="extend_step")
+    assert step_logits.shape == (B, 1, vocab)
+    assert bool(jnp.isfinite(step_logits).all()), f"{arch}: NaN decode logits"
+
+
+def test_registry_covers_assignment():
+    assert len(registry.ASSIGNED_ARCHS) == 10
+    assert len(registry.SHAPE_NAMES) == 4
+    total_pairs = len(registry.supported_pairs()) + len(registry.skipped_pairs())
+    assert total_pairs == 40
+    # Skips match DESIGN.md §Arch-applicability.
+    skipped = {(a, s) for a, s, _ in registry.skipped_pairs()}
+    assert ("hubert-xlarge", "decode_32k") in skipped
+    assert ("hubert-xlarge", "long_500k") in skipped
+    for dense in ["qwen2-1.5b", "qwen1.5-4b", "internlm2-1.8b",
+                  "phi-3-vision-4.2b", "arctic-480b"]:
+        assert (dense, "long_500k") in skipped
+    # Sub-quadratic archs RUN long_500k.
+    for a in ["rwkv6-7b", "jamba-1.5-large-398b", "mixtral-8x7b", "gemma2-27b"]:
+        assert (a, "long_500k") not in skipped
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_instantiates_and_counts(arch):
+    """Full (paper-exact) configs must instantiate structurally (no arrays)
+    and report sane param counts."""
+    spec = registry.get_spec(arch)
+    cfg = spec.make_model()
+    total, active = registry.param_counts(cfg)
+    expected = {
+        "qwen2-1.5b": (1.2e9, 2.2e9),
+        "phi-3-vision-4.2b": (3.0e9, 4.9e9),   # decoder only (ViT stubbed)
+        "qwen1.5-4b": (3.0e9, 5.2e9),
+        "jamba-1.5-large-398b": (330e9, 480e9),
+        "mixtral-8x7b": (40e9, 52e9),
+        "arctic-480b": (400e9, 530e9),
+        "gemma2-27b": (22e9, 32e9),
+        "rwkv6-7b": (6e9, 9e9),
+        "hubert-xlarge": (0.9e9, 1.3e9),
+        "internlm2-1.8b": (1.5e9, 2.3e9),
+    }[arch]
+    assert expected[0] < total < expected[1], f"{arch}: total={total/1e9:.2f}B"
+    assert active <= total
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_input_specs_match_assigned_shapes(arch):
+    spec = registry.get_spec(arch)
+    for shape in registry.SHAPE_NAMES:
+        if not spec.supports(shape):
+            continue
+        specs = spec.input_specs(shape)
+        info = SHAPES[shape]
+        B = info["global_batch"]
+        lead = next(iter(specs.values())).shape[0]
+        assert lead == B, f"{arch}/{shape}: batch {lead} != {B}"

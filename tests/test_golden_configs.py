@@ -1,0 +1,58 @@
+"""Golden-configuration tests (paper §7.3).
+
+"Key training configs are serialized into human-readable format and
+committed along with code changes" — config drift across the 10 assigned
+architectures produces reviewable diffs instead of silent experiment
+changes. Regenerate after INTENDED changes with:
+
+    PYTHONPATH=src python tests/test_golden_configs.py --regen
+"""
+
+import json
+import os
+import sys
+
+import pytest
+
+from repro.configs import registry
+from repro.core.config import config_to_dict
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+
+
+def _golden_path(arch):
+    return os.path.join(GOLDEN_DIR, f"{arch}.json")
+
+
+def _serialize(arch):
+    spec = registry.get_spec(arch)
+    d = config_to_dict(spec.make_model())
+    return json.dumps(d, indent=1, sort_keys=True, default=str)
+
+
+@pytest.mark.parametrize("arch", registry.ASSIGNED_ARCHS)
+def test_golden_config(arch):
+    path = _golden_path(arch)
+    if not os.path.exists(path):
+        pytest.skip(f"no golden file for {arch}; run --regen")
+    with open(path) as f:
+        golden = f.read()
+    current = _serialize(arch)
+    assert current == golden, (
+        f"{arch} config drifted from golden snapshot. If intended, regen: "
+        "PYTHONPATH=src python tests/test_golden_configs.py --regen")
+
+
+def test_golden_files_cover_all_archs():
+    missing = [a for a in registry.ASSIGNED_ARCHS
+               if not os.path.exists(_golden_path(a))]
+    assert not missing, f"goldens missing for {missing}"
+
+
+if __name__ == "__main__":
+    if "--regen" in sys.argv:
+        os.makedirs(GOLDEN_DIR, exist_ok=True)
+        for arch in registry.ASSIGNED_ARCHS:
+            with open(_golden_path(arch), "w") as f:
+                f.write(_serialize(arch))
+            print(f"[golden] wrote {arch}")

@@ -1,0 +1,212 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles.
+
+All kernels run in interpret=True mode on CPU (the kernel body executes with
+real Python/jnp semantics), which validates the block decomposition, masking,
+and online-softmax logic exactly as Mosaic would execute it on TPU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_forward
+from repro.kernels.rmsnorm import rmsnorm_forward
+
+
+def _mk_qkv(key, B, S, T, Hq, Hkv, D, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, T, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, T, Hkv, D), dtype)
+    return q, k, v
+
+
+SHAPE_SWEEP = [
+    # B, S, Hq, Hkv, D, block_q, block_k
+    (1, 128, 1, 1, 64, 64, 64),
+    (2, 256, 4, 2, 32, 128, 128),
+    (1, 384, 4, 1, 64, 128, 128),   # ragged: S not multiple of block
+    (2, 100, 2, 2, 32, 64, 64),     # pad both dims
+    (1, 256, 8, 2, 128, 128, 64),   # GQA 4:1, MXU-aligned D
+]
+
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,D,bq,bk", SHAPE_SWEEP)
+def test_flash_matches_ref_causal(B, S, Hq, Hkv, D, bq, bk):
+    q, k, v = _mk_qkv(jax.random.PRNGKey(0), B, S, S, Hq, Hkv, D)
+    out = flash_attention_forward(q, k, v, causal=True, block_q=bq, block_k=bk,
+                                  interpret=True)
+    expect = ref.reference_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("window", [16, 64, 100])
+def test_flash_sliding_window(window):
+    q, k, v = _mk_qkv(jax.random.PRNGKey(1), 1, 256, 256, 2, 2, 32)
+    out = flash_attention_forward(q, k, v, causal=True, sliding_window=window,
+                                  block_q=64, block_k=64, interpret=True)
+    expect = ref.reference_attention(q, k, v, causal=True, sliding_window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_softcap_and_noncausal():
+    q, k, v = _mk_qkv(jax.random.PRNGKey(2), 2, 128, 128, 2, 1, 32)
+    out = flash_attention_forward(q, k, v, causal=False, logit_softcap=30.0,
+                                  block_q=64, block_k=64, interpret=True)
+    expect = ref.reference_attention(q, k, v, causal=False, logit_softcap=30.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_bf16_io():
+    q, k, v = _mk_qkv(jax.random.PRNGKey(3), 1, 128, 128, 2, 2, 64, dtype=jnp.bfloat16)
+    out = flash_attention_forward(q, k, v, causal=True, interpret=True)
+    assert out.dtype == jnp.bfloat16
+    expect = ref.reference_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), atol=2e-2)
+
+
+@given(
+    st.integers(1, 2),                     # B
+    st.sampled_from([64, 96, 128, 200]),   # S
+    st.sampled_from([(2, 1), (2, 2), (4, 2)]),  # heads
+    st.sampled_from([32, 64]),             # D
+    st.booleans(),                         # causal
+)
+@settings(max_examples=12, deadline=None)
+def test_flash_property_sweep(B, S, heads, D, causal):
+    Hq, Hkv = heads
+    q, k, v = _mk_qkv(jax.random.PRNGKey(S * 7 + D), B, S, S, Hq, Hkv, D)
+    out = flash_attention_forward(q, k, v, causal=causal, block_q=64, block_k=64,
+                                  interpret=True)
+    expect = ref.reference_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=3e-5, rtol=3e-5)
+
+
+# ------------------------------ RMSNorm --------------------------------------
+
+
+@pytest.mark.parametrize("shape,block_rows", [
+    ((4, 7, 64), 8),
+    ((2, 256, 128), 256),
+    ((1, 100, 32), 64),   # row padding
+])
+def test_rmsnorm_kernel_matches_ref(shape, block_rows):
+    x = jax.random.normal(jax.random.PRNGKey(4), shape)
+    scale = jax.random.normal(jax.random.PRNGKey(5), (shape[-1],))
+    out = rmsnorm_forward(x, scale, block_rows=block_rows, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.reference_rmsnorm(x, scale)),
+                               atol=1e-6, rtol=1e-5)
+
+
+@given(st.sampled_from([16, 64, 128]), st.integers(1, 300))
+@settings(max_examples=15, deadline=None)
+def test_rmsnorm_property_sweep(D, rows):
+    x = jax.random.normal(jax.random.PRNGKey(rows), (rows, D))
+    scale = jnp.ones((D,))
+    out = rmsnorm_forward(x, scale, block_rows=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.reference_rmsnorm(x, scale)),
+                               atol=1e-6, rtol=1e-5)
+
+
+# ------------------------- dispatch wrapper ----------------------------------
+
+
+def test_ops_dispatch_decode_falls_back():
+    """1-token decode (distinct cache positions) must route to the ref path."""
+    q = jax.random.normal(jax.random.PRNGKey(6), (1, 1, 2, 32))
+    k = jax.random.normal(jax.random.PRNGKey(7), (1, 16, 2, 32))
+    v = jax.random.normal(jax.random.PRNGKey(8), (1, 16, 2, 32))
+    qp = jnp.array([10])
+    kp = jnp.arange(16)
+    out = ops.flash_attention(q, k, v, q_positions=qp, k_positions=kp,
+                              causal=True, interpret=True)
+    expect = ref.reference_attention(q, k, v, q_positions=qp, k_positions=kp,
+                                     causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-5)
+
+
+def test_attention_layer_flash_impl_matches_ref_impl():
+    """End-to-end through the layer: impl='flash' (interpret) == impl='ref'."""
+    from repro.core.module import functional
+    from repro.layers import MultiheadAttention
+
+    cfg = MultiheadAttention.default_config().set(
+        name="a", input_dim=64, num_heads=4, num_kv_heads=2,
+        impl="flash", kernel_interpret=True)
+    layer = cfg.instantiate()
+    state = layer.initialize_parameters_recursively(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(9), (2, 128, 64))
+    out_flash, _ = functional(layer, state=state, inputs=(x,))
+    cfg2 = cfg.clone(impl="ref")
+    layer2 = cfg2.instantiate()
+    out_ref, _ = functional(layer2, state=state, inputs=(x,))
+    np.testing.assert_allclose(np.asarray(out_flash), np.asarray(out_ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ------------------------------ WKV6 kernel ----------------------------------
+
+
+def _mk_wkv(key, B, T, H, K, V):
+    ks = jax.random.split(key, 5)
+    r = jax.random.normal(ks[0], (B, T, H, K))
+    k = jax.random.normal(ks[1], (B, T, H, K))
+    v = jax.random.normal(ks[2], (B, T, H, V))
+    w = jax.random.uniform(ks[3], (B, T, H, K), minval=0.55, maxval=0.995)
+    u = jax.random.normal(ks[4], (H, K)) * 0.5
+    return r, k, v, w, u
+
+
+@pytest.mark.parametrize("B,T,H,K,V,chunk", [
+    (1, 32, 1, 8, 8, 8),
+    (2, 64, 2, 16, 16, 16),
+    (1, 128, 2, 32, 32, 32),
+])
+def test_wkv6_kernel_matches_recurrent_oracle(B, T, H, K, V, chunk):
+    from repro.kernels.wkv6 import wkv6_forward
+
+    r, k, v, w, u = _mk_wkv(jax.random.PRNGKey(10), B, T, H, K, V)
+    out, s = wkv6_forward(r, k, v, w, u, chunk_size=chunk, interpret=True)
+    expect, s_ref = ref.reference_wkv6_recurrent(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_wkv6_kernel_with_initial_state():
+    from repro.kernels.wkv6 import wkv6_forward
+
+    B, T, H, K, V = 1, 32, 2, 8, 8
+    r, k, v, w, u = _mk_wkv(jax.random.PRNGKey(11), B, T, H, K, V)
+    s0 = jax.random.normal(jax.random.PRNGKey(12), (B, H, K, V)).astype(jnp.float32)
+    out, s = wkv6_forward(r, k, v, w, u, s0, chunk_size=8, interpret=True)
+    expect, s_ref = ref.reference_wkv6_recurrent(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_wkv6_ragged_falls_back_to_ref():
+    from repro.kernels import ops
+
+    B, T, H, K, V = 1, 30, 1, 8, 8  # T not divisible by chunk
+    r, k, v, w, u = _mk_wkv(jax.random.PRNGKey(13), B, T, H, K, V)
+    out, s = ops.wkv6(r, k, v, w, u, chunk_size=8, interpret=True)
+    expect, _ = ref.reference_wkv6_recurrent(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,110 @@
+"""Launch/analysis machinery tests (no heavy compiles — the real dry-run
+artifacts live in experiments/dryrun; these validate the components)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core.utils import resolve_spec, set_mesh
+from repro.launch.analysis import (
+    _type_bytes,
+    parse_collectives_dedup,
+    roofline_terms,
+)
+
+HLO_SAMPLE = """
+  %ag = bf16[16,1024]{1,0} all-gather(%p0), replica_groups={...}
+  %ar.1 = f32[32,32]{1,0} all-reduce(%x), to_apply=%add
+  %ars = f32[32,32]{1,0} all-reduce-start(%x), to_apply=%add
+  %ard = f32[32,32]{1,0} all-reduce-done(%ars)
+  %a2a = (bf16[8,8]{1,0}, bf16[8,8]{1,0}) all-to-all(%y, %z)
+  %cp = u32[4]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %rs = f32[16]{0} reduce-scatter(%v), to_apply=%add
+"""
+
+
+def test_type_bytes():
+    assert _type_bytes("bf16[16,1024]{1,0}") == 16 * 1024 * 2
+    assert _type_bytes("f32[]") == 4  # scalar
+    assert _type_bytes("(bf16[8,8], bf16[8,8])") == 2 * 64 * 2
+
+
+def test_parse_collectives_dedup():
+    out = parse_collectives_dedup(HLO_SAMPLE)
+    assert out["all-gather"]["count"] == 1
+    assert out["all-gather"]["bytes"] == 16 * 1024 * 2
+    # start counted once, done skipped, plain one counted.
+    assert out["all-reduce"]["count"] == 2
+    assert out["all-to-all"]["bytes"] == 2 * 64 * 2
+    assert out["collective-permute"]["count"] == 1
+    assert out["reduce-scatter"]["count"] == 1
+
+
+def test_roofline_terms_dominance():
+    rep = roofline_terms(
+        cost={"flops": 197e12, "bytes accessed": 819e9 * 2},
+        hlo_text=HLO_SAMPLE, chips=256, model_flops_global=197e12 * 256)
+    assert rep.compute_s == pytest.approx(1.0)
+    assert rep.memory_s == pytest.approx(2.0)
+    assert rep.dominant == "memory"
+    assert rep.useful_flops_ratio == pytest.approx(1.0)
+
+
+def test_extrapolate_affine():
+    from repro.launch.dryrun import extrapolate_affine
+
+    # cost(L) = 10 (outside) + 3 per layer -> c1 = 13, c2 = 16.
+    assert extrapolate_affine(13.0, 16.0, 28) == pytest.approx(10 + 3 * 28)
+    assert extrapolate_affine(5.0, 5.0, 100) == 5.0
+
+
+def test_resolve_spec_drops_unknown_axes():
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    spec = resolve_spec((("pod", "data"), None, "model"), mesh)
+    assert spec == jax.sharding.PartitionSpec("data", None, None)
+
+
+def test_adapt_for_batch1_decode_config_surgery():
+    from repro.launch.dryrun import adapt_for_batch1_decode
+
+    spec = registry.get_spec("gemma2-27b")
+    cfg = spec.make_model()
+    adapt_for_batch1_decode(cfg)
+    attn = cfg.decoder.stack.layer.layers[0].self_attention
+    # Batch axes gone from activations; cache seq on "data".
+    assert attn.kv_cache_partition[0] is None
+    assert attn.kv_cache_partition[1] == "data"
+    assert attn.hidden_partition[0] is None
+    # Weight partitions untouched.
+    assert attn.qkv_weight_partition == ("data", "model")
+
+
+def test_state_partition_specs_match_state_structure():
+    """Every arch's decode-state sharding tree must mirror init_states."""
+    from repro.core.module import functional
+
+    for arch in ["qwen2-1.5b", "jamba-1.5-large-398b", "rwkv6-7b",
+                 "mixtral-8x7b"]:
+        spec = registry.get_spec(arch)
+        model = spec.make_smoke().instantiate()
+        specs = model.state_partition_specs()
+        cache, _ = functional(model, state={}, inputs=(2, 16),
+                              method="init_states")
+
+        def paths(tree):
+            flat = jax.tree_util.tree_flatten_with_path(
+                tree, is_leaf=lambda x: isinstance(x, tuple) or x is None)[0]
+            return {jax.tree_util.keystr(p) for p, _ in flat}
+
+        assert paths(specs) == paths(cache), arch
+
+
+def test_stack_depth_detection():
+    from repro.launch.dryrun import stack_depth
+
+    assert stack_depth(registry.get_spec("qwen2-1.5b").make_model()) == 28
+    assert stack_depth(registry.get_spec("jamba-1.5-large-398b").make_model()) == 9
+    assert stack_depth(registry.get_spec("gemma2-27b").make_model()) == 23
