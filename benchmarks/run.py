@@ -5,9 +5,12 @@
   bench_inference  — Table 4 + Fig 5 (TTFT / TPOT / throughput / cont. batching)
   bench_scaling    — Fig 4 (single-pod vs multi-pod scaling from dry-runs)
 
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,derived`` CSV. Modules may expose a ``LAST_JSON``
+dict after ``run()``; it is persisted as ``BENCH_<suffix>.json`` next to the
+CWD so the perf trajectory (e.g. decode TPOT) is tracked across PRs.
 """
 
+import json
 import sys
 import traceback
 
@@ -25,6 +28,13 @@ def main() -> None:
         for name, us, derived in rows:
             print(f"{name},{us:.2f},{derived}")
             sys.stdout.flush()
+        payload = getattr(mod, "LAST_JSON", None)
+        if payload is not None:
+            suffix = mod.__name__.rsplit("bench_", 1)[-1]
+            path = f"BENCH_{suffix}.json"
+            with open(path, "w") as f:
+                json.dump(payload, f, indent=2, sort_keys=True)
+            print(f"# wrote {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -20,6 +20,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 __all__ = [
     "PartitionSpecLike",
+    "make_mesh",
     "set_mesh",
     "current_mesh",
     "resolve_spec",
@@ -37,6 +38,16 @@ __all__ = [
 # A partition spec expressed as a tuple of axis names (or tuples of names, or
 # None) — e.g. (("pod", "data"), None, "model").
 PartitionSpecLike = Optional[Sequence[Union[str, Tuple[str, ...], None]]]
+
+
+def make_mesh(shape, axis_names) -> Mesh:
+    """``jax.make_mesh`` with Auto axis types where this jax supports them
+    (``jax.sharding.AxisType`` only exists in newer releases)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(tuple(shape), tuple(axis_names))
+    return jax.make_mesh(tuple(shape), tuple(axis_names),
+                         axis_types=(axis_type.Auto,) * len(shape))
 
 
 class _MeshHolder(threading.local):

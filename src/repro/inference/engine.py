@@ -6,11 +6,23 @@ state pytrees. Supports:
 
   * prefill + single-token decode (``serve_step``): the function the decode
     dry-run shapes lower,
-  * batched generation with greedy/temperature sampling,
+  * batched generation as ONE device program: a jitted ``lax.scan`` decode
+    loop with fused on-device greedy/temperature sampling (PRNG key threaded
+    through the carry) — a 256-token generation costs one dispatch + one
+    host sync instead of 256,
   * continuous batching: a slot-based scheduler that admits new requests into
-    finished slots mid-flight (Orca-style, §6) without recompiling.
+    finished slots mid-flight (Orca-style, §6). Admission is a single jitted
+    ``admit_fn`` that prefills straight into the batch cache via per-leaf
+    ``dynamic_update_slice`` on precomputed batch axes; prompts are padded to
+    power-of-two length buckets so the number of compiles is O(log max_len),
+    and the ``length`` argument keeps bucket padding out of every mixer's
+    cache/recurrent state.
 
-TTFT/TPOT benchmarks (paper Table 4) run on this engine.
+All jitted callables are built once and cached on the engine, so repeated
+``generate``/``serve`` calls hit the jit trace cache instead of recompiling.
+TTFT/TPOT benchmarks (paper Table 4) run on this engine; the decode-step
+attention kernel is selected by ``MultiheadAttention.Config.decode_impl``
+("ref" | "flash_decode") — a config knob, not a code change (§4.2).
 """
 
 from __future__ import annotations
@@ -27,6 +39,9 @@ from repro.core.config import REQUIRED, ConfigBase, Required, config_class
 from repro.core.module import Module, functional, no_context
 
 __all__ = ["InferenceEngine", "Request", "GenerationResult"]
+
+# Smallest admission bucket: prompts pad up to the next power of two >= this.
+_MIN_BUCKET = 8
 
 
 @dataclasses.dataclass
@@ -59,8 +74,9 @@ class InferenceEngine(Module):
         super().__init__(cfg, parent=parent)
         self._add_child("model", cfg.model)
         self._params = None
-        self._jit_prefill = None
-        self._jit_decode = None
+        # Jitted callables, built once per engine: repeated generate()/serve()
+        # calls reuse the jit trace/compile caches instead of recompiling.
+        self._jit_fns: Dict[Any, Callable] = {}
 
     # ----------------------------------------------------------------- setup
 
@@ -97,7 +113,7 @@ class InferenceEngine(Module):
         """(params, cache, ids_step (B,1)) -> (cache, logits (B,V)).
 
         ONE new token against a full-length KV cache — the decode dry-run
-        shape. Reused verbatim by generate()/continuous batching.
+        shape. The scan decode loop and continuous batching both build on it.
         """
         model = self.model
 
@@ -110,19 +126,62 @@ class InferenceEngine(Module):
 
         return serve_step
 
+    def _jit(self, key, builder, **jit_kwargs) -> Callable:
+        if key not in self._jit_fns:
+            self._jit_fns[key] = jax.jit(builder(), **jit_kwargs)
+        return self._jit_fns[key]
+
     # ------------------------------------------------------------ generation
+
+    @no_context
+    def _decode_loop_fn(self, max_new_tokens: int, greedy: bool) -> Callable:
+        """(params, cache, logits, key, temperature) -> (cache, tokens (B,N)).
+
+        The whole decode phase as one device program: sample (argmax or
+        categorical at ``temperature``) fused with the model's extend_step
+        inside a ``lax.scan`` — no per-token host round trip.
+        """
+        serve_step = self.serve_step_fn()
+
+        def loop(params, cache, logits, key, temperature):
+            def sample(logits, key):
+                if greedy:
+                    return jnp.argmax(logits, axis=-1), key
+                key, sub = jax.random.split(key)
+                return jax.random.categorical(
+                    sub, logits / temperature, axis=-1), key
+
+            def body(carry, _):
+                cache, logits, key = carry
+                nxt, key = sample(logits, key)
+                cache, logits = serve_step(params, cache, nxt[:, None])
+                return (cache, logits, key), nxt
+
+            # N-1 scan steps + one final sample: the last sampled token
+            # needs no extend_step, so no model forward is wasted on it.
+            (cache, logits, key), toks = jax.lax.scan(
+                body, (cache, logits, key), None, length=max_new_tokens - 1)
+            last, _ = sample(logits, key)
+            return cache, jnp.concatenate(
+                [jnp.swapaxes(toks, 0, 1), last[:, None]], axis=1)
+
+        return loop
 
     @no_context
     def generate(self, prompts: np.ndarray, *, max_new_tokens: int = 16,
                  temperature: float = 0.0, seed: int = 0
                  ) -> Tuple[np.ndarray, Dict[str, float]]:
-        """Batched generation: one prefill + N decode steps. Returns
-        (tokens (B, max_new_tokens), timing metrics)."""
+        """Batched generation: one prefill dispatch + one scan-decode
+        dispatch. Returns (tokens (B, max_new_tokens), timing metrics)."""
         assert self._params is not None, "call load() first"
         B = prompts.shape[0]
         cache = self.init_cache(B)
-        prefill = jax.jit(self.prefill_fn())
-        decode = jax.jit(self.serve_step_fn(), donate_argnums=(1,))
+        prefill = self._jit("prefill", self.prefill_fn)
+        greedy = temperature <= 0
+        loop = self._jit(
+            ("decode_loop", max_new_tokens, greedy),
+            lambda: self._decode_loop_fn(max_new_tokens, greedy),
+            donate_argnums=(1,))
 
         t0 = time.perf_counter()
         cache, logits = prefill(self._params, cache, jnp.asarray(prompts))
@@ -130,30 +189,24 @@ class InferenceEngine(Module):
         ttft = time.perf_counter() - t0
 
         key = jax.random.PRNGKey(seed)
-        outs = []
+        temp = jnp.asarray(temperature if not greedy else 1.0, jnp.float32)
         t1 = time.perf_counter()
-        for step in range(max_new_tokens):
-            if temperature > 0:
-                key, sub = jax.random.split(key)
-                nxt = jax.random.categorical(sub, logits / temperature, axis=-1)
-            else:
-                nxt = jnp.argmax(logits, axis=-1)
-            outs.append(nxt)
-            cache, logits = decode(self._params, cache, nxt[:, None])
-        jax.block_until_ready(logits)
-        tpot = (time.perf_counter() - t1) / max_new_tokens
-        tokens = np.asarray(jnp.stack(outs, axis=1))
-        return tokens, {"ttft_s": ttft, "tpot_s": tpot,
-                        "throughput_tok_s": B * max_new_tokens /
-                        max(time.perf_counter() - t1, 1e-9)}
+        cache, tokens = loop(self._params, cache, logits, key, temp)
+        tokens.block_until_ready()
+        dt = time.perf_counter() - t1
+        tpot = dt / max_new_tokens
+        return np.asarray(tokens), {
+            "ttft_s": ttft, "tpot_s": tpot,
+            "throughput_tok_s": B * max_new_tokens / max(dt, 1e-9)}
 
     # ---------------------------------------------------- continuous batching
 
     @no_context
     def batch_axes(self):
         """Per-leaf batch-axis map: the axis where init_cache(1) and
-        init_cache(slots) shapes differ. Caches are opaque pytrees; this is
-        the only structural fact splicing needs."""
+        init_cache(slots) shapes differ (-1 = no batch axis / shared leaf).
+        Caches are opaque pytrees; this is the only structural fact
+        admission splicing needs."""
         cfg = self.config
         model = self.model
 
@@ -168,19 +221,84 @@ class InferenceEngine(Module):
             for i, (x, y) in enumerate(zip(a.shape, b.shape)):
                 if x != y:
                     return i
-            return None  # no batch axis (shared leaf)
+            return -1  # no batch axis (shared leaf)
 
         return jax.tree.map(axis, s1, sN)
+
+    def _bucket_len(self, n: int) -> int:
+        """Power-of-two admission buckets: prompts of any length compile
+        O(log n) prefill shapes. Buckets may exceed max_len — the ring cache
+        keeps the last T valid tokens (and recurrent mixers consume the full
+        prompt), same as batched generation with an over-long prompt."""
+        b = _MIN_BUCKET
+        while b < n:
+            b *= 2
+        return b
+
+    @no_context
+    def _admit_fn(self) -> Callable:
+        """(params, batch_cache, padded_prompt (1,L), prompt_len, slot)
+        -> (batch_cache, first_token).
+
+        One jitted program per bucket L: prefills a fresh single-slot cache
+        (bucket padding excluded via ``length``) and splices every leaf into
+        the batch cache with ``dynamic_update_slice`` on its batch axis.
+        ``prompt_len`` and ``slot`` are traced scalars — admitting into a
+        different slot or with a different true length never recompiles.
+        """
+        cfg = self.config
+        model = self.model
+        axes = self.batch_axes()
+
+        def admit(params, batch_cache, padded_prompt, prompt_len, slot):
+            c1, _ = functional(model, state=params,
+                               inputs=(1, cfg.max_len), method="init_states")
+            (c1, logits), _ = functional(
+                model, state=params,
+                inputs={"state": c1, "input_ids": padded_prompt,
+                        "length": prompt_len},
+                method="prefill")
+            last = jax.lax.dynamic_index_in_dim(
+                logits, prompt_len - 1, axis=1, keepdims=False)  # (1, V)
+
+            def splice(bc, c, ax):
+                if ax < 0:
+                    return bc
+                return jax.lax.dynamic_update_slice_in_dim(
+                    bc, c.astype(bc.dtype), slot, axis=ax)
+
+            new_cache = jax.tree.map(splice, batch_cache, c1, axes)
+            return new_cache, jnp.argmax(last[0], axis=-1).astype(jnp.int32)
+
+        return admit
+
+    @no_context
+    def _serve_decode_fn(self) -> Callable:
+        """(params, cache, ids_step (S,1)) -> (cache, next_tokens (S,)).
+
+        Greedy argmax fused into the step so the host transfers S ints per
+        step instead of the full (S, V) logits."""
+        serve_step = self.serve_step_fn()
+
+        def decode(params, cache, ids_step):
+            cache, logits = serve_step(params, cache, ids_step)
+            return cache, jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+        return decode
 
     @no_context
     def serve(self, requests: List[Request]) -> List[GenerationResult]:
         """Slot-based continuous batching.
 
         All slots decode together each step; finished slots are refilled from
-        the queue by prefilling into a fresh single-slot cache and splicing it
-        into the batch cache on each leaf's batch axis. Per-slot cache
-        positions ("pos"/"index") make mid-flight admission exact. Model code
-        is untouched — the cache is an opaque pytree (paper §6).
+        the queue via the jitted bucketed ``admit_fn`` (no recompiles once
+        the touched buckets are warm). Per-slot cache positions
+        ("pos"/"index") make mid-flight admission exact. Model code is
+        untouched — the cache is an opaque pytree (paper §6).
+
+        Serving decodes greedily: ``Request.temperature`` is currently
+        ignored (per-slot sampling inside the fused decode step is future
+        work); use :meth:`generate` for temperature sampling.
         """
         assert self._params is not None
         cfg = self.config
@@ -188,48 +306,52 @@ class InferenceEngine(Module):
         queue = sorted(requests, key=lambda r: r.arrival_time)
         results: Dict[int, GenerationResult] = {}
 
-        prefill1 = jax.jit(self.prefill_fn())
-        decode = jax.jit(self.serve_step_fn(), donate_argnums=(1,))
+        admit_fn = self._jit("admit", self._admit_fn, donate_argnums=(1,))
+        decode = self._jit("serve_decode", self._serve_decode_fn,
+                           donate_argnums=(1,))
+        params = self._params
 
         batch_cache = self.init_cache(S)
-        axes = self.batch_axes()
         slot_req: List[Optional[Request]] = [None] * S
         slot_tokens: List[List[int]] = [[] for _ in range(S)]
         slot_t0: List[float] = [0.0] * S
 
-        def splice(bc, c1, ax, slot):
-            if ax is None:
-                return bc
-            src = jnp.take(c1, 0, axis=ax)
-            idx = tuple([slice(None)] * ax + [slot])
-            return bc.at[idx].set(src)
-
         def admit(slot: int, req: Request):
             nonlocal batch_cache
-            c1 = self.init_cache(1)
+            n = len(req.prompt)
+            L = self._bucket_len(n)
+            padded = np.full((1, L), cfg.pad_token, np.int32)
+            padded[0, :n] = req.prompt
             t0 = time.perf_counter()
-            c1, logits1 = prefill1(self._params, c1, jnp.asarray(req.prompt[None]))
+            batch_cache, tok0 = admit_fn(
+                params, batch_cache, jnp.asarray(padded),
+                jnp.asarray(n, jnp.int32), jnp.asarray(slot, jnp.int32))
+            tok0 = int(tok0)
             ttft = time.perf_counter() - t0
-            results[req.request_id] = GenerationResult(req.request_id, [], ttft_s=ttft)
-            batch_cache = jax.tree.map(
-                lambda bc, c, ax: splice(bc, c, ax, slot), batch_cache, c1, axes)
+            results[req.request_id] = GenerationResult(req.request_id, [],
+                                                       ttft_s=ttft)
+            if tok0 == cfg.eos_token or req.max_new_tokens <= 1:
+                # Done at the first token: don't occupy a decode slot.
+                results[req.request_id].tokens = [tok0]
+                return
             slot_req[slot] = req
-            slot_tokens[slot] = [int(jnp.argmax(logits1[0]))]
+            slot_tokens[slot] = [tok0]
             slot_t0[slot] = time.perf_counter()
 
         while queue or any(r is not None for r in slot_req):
-            # Admit into free slots.
+            # Admit into free slots (an admission that finishes at its
+            # first token leaves the slot free for the next request).
             for s in range(S):
-                if slot_req[s] is None and queue:
+                while slot_req[s] is None and queue:
                     admit(s, queue.pop(0))
             active = [s for s in range(S) if slot_req[s] is not None]
             if not active:
                 break
-            last = jnp.asarray(
+            last = np.asarray(
                 [[slot_tokens[s][-1] if slot_req[s] is not None else cfg.pad_token]
-                 for s in range(S)], jnp.int32)
-            batch_cache, logits = decode(self._params, batch_cache, last)
-            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+                 for s in range(S)], np.int32)
+            batch_cache, nxt_dev = decode(params, batch_cache, jnp.asarray(last))
+            nxt = np.asarray(nxt_dev)
             for s in active:
                 req = slot_req[s]
                 slot_tokens[s].append(int(nxt[s]))

@@ -1,0 +1,202 @@
+"""TPU Pallas flash-decode: split-KV online-softmax attention for decode.
+
+The decode hot path (paper §6, Table 4 TPOT) is one-or-few query tokens
+against a long KV cache. The reference path materializes the full
+``(B, Hkv, G, S', T)`` logits tensor in f32 per token; this kernel never
+does — it streams the cache in ``block_k`` chunks through VMEM, carrying
+the online-softmax running max / denominator / accumulator in f32 VMEM
+scratch (flash-decoding-style split-KV, with the split axis mapped to the
+TPU grid's sequential innermost dimension).
+
+Design points:
+  * GQA-aware: the grid iterates (batch, kv_head, kv_block) and all G query
+    heads of a group (x S' decode steps) are flattened into the rows of one
+    q block — each KV block is fetched from HBM exactly once per group,
+    not once per query head.
+  * Masking comes directly from the cache's per-slot ``pos`` tensor
+    (absolute positions, -1 = empty slot), so ring-buffer / sliding-window
+    cache layouts need no gather or re-ordering: wrapped slots mask
+    correctly wherever they physically live.
+  * Fully-masked rows (e.g. empty continuous-batching slots) produce zeros
+    (the reference path produces a degenerate uniform average instead; both
+    are unused downstream, but zeros keep the kernel gather-free).
+  * ``interpret=True`` runs the same kernel body under the Pallas
+    interpreter for CPU validation (config choice, not code change: §4.2).
+
+Forward only — decode is inference-only by construction. The kernel expects
+a single-device or replicated KV cache: with sequence-sharded caches, use
+the reference decode path (``decode_impl="ref"``), which constrains the
+logits sharding so GSPMD keeps the flash-decoding layout; shard_map
+plumbing for this kernel is future work.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pallas_compat import CompilerParams as _CompilerParams
+
+__all__ = ["flash_decode_forward"]
+
+NEG_INF = -1e30
+_LANES = 128  # VREG lane count: scratch second-minor dim
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _kernel(
+    q_ref,  # (1, 1, R, D): rows = S' decode steps x G grouped query heads
+    k_ref,  # (1, block_k, 1, D)
+    v_ref,  # (1, block_k, 1, D)
+    qpos_ref,  # (1, R) int32, -1 = padding row
+    kpos_ref,  # (1, block_k) int32, -1 = empty cache slot
+    o_ref,  # (1, 1, R, D)
+    m_scr,  # (R, _LANES) f32
+    l_scr,  # (R, _LANES) f32
+    acc_scr,  # (R, D) f32
+    *,
+    num_kv_blocks: int,
+    causal: bool,
+    sliding_window: Optional[int],
+    logit_softcap: Optional[float],
+    scale: float,
+):
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # (R, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)  # (bk, D)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    if logit_softcap is not None:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+
+    q_pos = qpos_ref[0][:, None]  # (R, 1)
+    k_pos = kpos_ref[0][None, :]  # (1, bk)
+    # Empty slots (pos < 0) and padding rows are masked; ring wraparound is
+    # handled for free because masking reads the slot's absolute position.
+    mask = jnp.logical_and(k_pos >= 0, q_pos >= 0)
+    if causal:
+        mask = jnp.logical_and(mask, k_pos <= q_pos)
+    if sliding_window is not None:
+        mask = jnp.logical_and(mask, k_pos > q_pos - sliding_window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[:, 0:1]  # (R, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # Guard fully-masked rows: keep the exp argument finite.
+    m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+    p = jnp.exp(s - m_safe)
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_safe)
+    alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, alpha)
+
+    l_new = alpha * l_scr[:, 0:1] + jnp.sum(p, axis=1, keepdims=True)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)  # (bk, D)
+    pv = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * alpha + pv
+    m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+    l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(kj == num_kv_blocks - 1)
+    def _finalize():
+        l = l_scr[:, 0:1]
+        denom = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_decode_forward(
+    q: jax.Array,  # (B, S', Hq, D), S' small (decode steps)
+    k: jax.Array,  # (B, T, Hkv, D) — the cache, any slot order
+    v: jax.Array,
+    q_positions: jax.Array,  # (B, S') absolute positions of the new tokens
+    k_positions: jax.Array,  # (B, T) per-slot absolute positions, -1 = empty
+    *,
+    causal: bool = True,
+    sliding_window: Optional[int] = None,
+    logit_softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    B, Sq, Hq, D = q.shape
+    _, T, Hkv, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    G = Hq // Hkv
+    scale = (D ** -0.5) if scale is None else scale
+
+    q_positions = jnp.broadcast_to(jnp.asarray(q_positions, jnp.int32), (B, Sq))
+    k_positions = jnp.broadcast_to(jnp.asarray(k_positions, jnp.int32), (B, T))
+
+    # Rows of one q block: (s', g) pairs for a whole KV group.
+    R = Sq * G
+    R_pad = _round_up(max(R, 8), 8)
+    # q: (B, S', Hkv*G, D) -> (B, Hkv, S'*G, D); head h = kv * G + g.
+    qr = q.reshape(B, Sq, Hkv, G, D).transpose(0, 2, 1, 3, 4).reshape(B, Hkv, R, D)
+    qpos_rows = jnp.repeat(q_positions, G, axis=1)  # (B, R): row r -> q_pos[r // G]
+    if R_pad != R:
+        qr = jnp.pad(qr, ((0, 0), (0, 0), (0, R_pad - R), (0, 0)))
+        qpos_rows = jnp.pad(qpos_rows, ((0, 0), (0, R_pad - R)),
+                            constant_values=-1)
+
+    block_k = min(block_k, _round_up(T, 8))
+    T_pad = _round_up(T, block_k)
+    if T_pad != T:
+        k = jnp.pad(k, ((0, 0), (0, T_pad - T), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, T_pad - T), (0, 0), (0, 0)))
+        # Padding slots carry pos = -1 and are masked like empty slots.
+        k_positions = jnp.pad(k_positions, ((0, 0), (0, T_pad - T)),
+                              constant_values=-1)
+    num_kv_blocks = T_pad // block_k
+
+    grid = (B, Hkv, num_kv_blocks)
+    kernel = functools.partial(
+        _kernel,
+        num_kv_blocks=num_kv_blocks,
+        causal=causal,
+        sliding_window=sliding_window,
+        logit_softcap=logit_softcap,
+        scale=scale,
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, R_pad, D), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, D), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, block_k, 1, D), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, R_pad), lambda b, h, j: (b, 0)),
+            pl.BlockSpec((1, block_k), lambda b, h, j: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, R_pad, D), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, R_pad, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((R_pad, _LANES), jnp.float32),
+            pltpu.VMEM((R_pad, _LANES), jnp.float32),
+            pltpu.VMEM((R_pad, D), jnp.float32),
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(qr, k, v, qpos_rows, k_positions)
+
+    # (B, Hkv, R, D) -> (B, S', Hq, D).
+    out = out[:, :, :R].reshape(B, Hkv, Sq, G, D).transpose(0, 2, 1, 3, 4)
+    return out.reshape(B, Sq, Hq, D)

@@ -15,9 +15,41 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels.flash_attention import flash_attention_forward
+from repro.kernels.flash_decode import flash_decode_forward
 from repro.kernels.rmsnorm import rmsnorm_forward
 
-__all__ = ["flash_attention", "rmsnorm", "wkv6"]
+__all__ = ["flash_attention", "decode_attention", "rmsnorm", "wkv6"]
+
+
+def _same_positions(q_positions, k_positions) -> bool:
+    """True iff q/k positions are provably identical (so the contiguous
+    self-attention kernel applies).
+
+    Checks by *value* for concrete arrays — callers frequently pass
+    equal-but-distinct position arrays (e.g. two ``jnp.arange(S)`` calls),
+    which the old identity-only check silently sent down the
+    O(S*T)-materializing reference path. Traced (abstract) values can't be
+    value-compared, so they fall back to the identity check.
+    """
+    if q_positions is None and k_positions is None:
+        return True
+    if q_positions is k_positions:
+        return True
+    if q_positions is None or k_positions is None:
+        return False
+    q_shape = getattr(q_positions, "shape", None)
+    if q_shape != getattr(k_positions, "shape", None):
+        return False
+    try:
+        import numpy as np
+
+        if isinstance(q_positions, jax.core.Tracer) or \
+                isinstance(k_positions, jax.core.Tracer):
+            return False
+        return bool(np.array_equal(np.asarray(q_positions),
+                                   np.asarray(k_positions)))
+    except (TypeError, jax.errors.ConcretizationTypeError):
+        return False
 
 
 def flash_attention(
@@ -40,8 +72,7 @@ def flash_attention(
     Decode steps (ragged cache positions) fall back to the reference path —
     a 1-token query is GEMV-bound, not a flash-kernel shape.
     """
-    same_positions = q_positions is None or (q_positions is k_positions)
-    if not same_positions or q.shape[1] == 1:
+    if not _same_positions(q_positions, k_positions) or q.shape[1] == 1:
         return _ref.reference_attention(
             q, k, v, q_positions=q_positions, k_positions=k_positions,
             causal=causal, sliding_window=sliding_window,
@@ -50,6 +81,40 @@ def flash_attention(
         q, k, v, causal=causal, sliding_window=sliding_window,
         logit_softcap=logit_softcap, scale=scale,
         block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+def decode_attention(
+    q: jax.Array,  # (B, S', Hq, D)
+    k: jax.Array,  # (B, T, Hkv, D) — KV cache, any physical slot order
+    v: jax.Array,
+    *,
+    q_positions,  # (B, S') or (S',) absolute positions of the new tokens
+    k_positions,  # (B, T) or (T,) per-slot absolute positions, -1 = empty
+    causal: bool = True,
+    sliding_window: Optional[int] = None,
+    logit_softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    block_k: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Flash-decode: split-KV online-softmax over a (ring-buffer) cache.
+
+    Unlike :func:`flash_attention` this never materializes the
+    ``(B, Hkv, G, S', T)`` logits tensor — the decode TPOT hot path streams
+    the cache through VMEM once per KV group. Masking reads the cache's
+    ``pos`` tensor directly, so sliding-window/ring layouts need no gather.
+    """
+    # Decode positions are never inferable (queries continue an absolute
+    # position stream; cache slots hold arbitrary ring positions) — a
+    # guessed default would silently mask nearly everything.
+    if q_positions is None or k_positions is None:
+        raise ValueError("decode_attention requires explicit q_positions "
+                         "and k_positions (cache pos tensor)")
+    # flash_decode_forward broadcasts (S',)/(1,S')/(B,S') position shapes.
+    return flash_decode_forward(
+        q, k, v, q_positions, k_positions, causal=causal,
+        sliding_window=sliding_window, logit_softcap=logit_softcap,
+        scale=scale, block_k=block_k, interpret=interpret)
 
 
 def rmsnorm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6,

@@ -1,0 +1,12 @@
+"""Version shims for the Pallas TPU API surface.
+
+Kept in one place (cf. ``repro.core.utils.make_mesh``) so a jax rename is
+fixed once, not once per kernel module.
+"""
+
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["CompilerParams"]
+
+# jax renamed TPUCompilerParams -> CompilerParams across releases.
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

@@ -14,6 +14,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.core.utils import make_mesh
+
 __all__ = ["make_production_mesh", "SINGLE_POD_SHAPE", "MULTI_POD_SHAPE"]
 
 SINGLE_POD_SHAPE = (16, 16)  # 256 chips of TPU v5e
@@ -23,11 +25,9 @@ MULTI_POD_SHAPE = (2, 16, 16)  # 2 pods = 512 chips
 def make_production_mesh(*, multi_pod: bool = False):
     shape = MULTI_POD_SHAPE if multi_pod else SINGLE_POD_SHAPE
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+    return make_mesh(shape, axes)
 
 
 def make_debug_mesh(n_data: int = 2, n_model: int = 2):
     """Small mesh for tests (requires xla_force_host_platform_device_count)."""
-    return jax.make_mesh((n_data, n_model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((n_data, n_model), ("data", "model"))

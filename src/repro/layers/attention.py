@@ -55,6 +55,16 @@ class MultiheadAttention(BaseLayer):
         query_scale: Optional[float] = None
         # "ref" | "blockwise" | "flash" (Pallas). Mesh rules select per target.
         impl: str = "blockwise"
+        # Decode-step attention: "ref" (materializes (B,Hkv,G,S',T) logits,
+        # portable) | "flash_decode" (Pallas split-KV online-softmax over the
+        # ring cache — never materializes decode logits). Config choice, not
+        # code change (paper §4.2); pairs with kernel_interpret off-TPU.
+        # NOTE: "flash_decode" assumes a single-device or replicated KV
+        # cache; for sequence-sharded caches keep "ref", whose
+        # logits_shard_fn keeps GSPMD in the partial-softmax layout
+        # (shard_map plumbing for the kernel is future work).
+        decode_impl: str = "ref"
+        decode_block_k: int = 256
         blockwise_chunk_size: int = 512
         blockwise_unroll: bool = False
         # Pallas kernel runs interpreted off-TPU (config, not code: §4.2).
@@ -121,6 +131,33 @@ class MultiheadAttention(BaseLayer):
             k = self.rope.apply(k, positions)
         return q, k, v
 
+    def _check_flash_decode_cache_unsharded(self):
+        """flash_decode has no shard_map plumbing yet: a sharded KV cache
+        would silently all-gather per decode step. Fail at trace time with
+        guidance instead (config-level diagnostic, paper §4.2 spirit)."""
+        from repro.core.utils import current_mesh, resolve_spec
+
+        cfg = self.config
+        mesh = current_mesh()
+        if mesh is None or cfg.kv_cache_partition is None:
+            return
+        spec = resolve_spec(cfg.kv_cache_partition, mesh)
+
+        def size(entry):
+            names = entry if isinstance(entry, (tuple, list)) else (entry,)
+            n = 1
+            for name in names:
+                if name is not None:
+                    n *= mesh.shape[name]
+            return n
+
+        if any(size(e) > 1 for e in tuple(spec)):
+            raise ValueError(
+                f"decode_impl='flash_decode' requires an unsharded/replicated "
+                f"KV cache, but kv_cache_partition={cfg.kv_cache_partition!r} "
+                f"resolves to {spec} on mesh {dict(mesh.shape)}. Use "
+                f"decode_impl='ref' for sequence-sharded caches.")
+
     def _attend(self, q, k, v, *, q_positions, k_positions, decode=False):
         cfg = self.config
         kwargs = dict(
@@ -131,11 +168,21 @@ class MultiheadAttention(BaseLayer):
             logit_softcap=cfg.logit_softcap,
             scale=cfg.query_scale,
         )
-        if decode and cfg.kv_cache_partition is not None:
-            kv_spec = tuple(cfg.kv_cache_partition)
-            # logits (B, Hkv, G, S', T): batch + cache-seq axes from config.
-            spec = (kv_spec[0], None, None, None, kv_spec[1])
-            kwargs["logits_shard_fn"] = lambda l: self._shard(l, spec)
+        if decode:
+            if cfg.decode_impl == "flash_decode":
+                from repro.kernels import ops as kernel_ops
+
+                self._check_flash_decode_cache_unsharded()
+                return kernel_ops.decode_attention(
+                    q, k, v, block_k=cfg.decode_block_k,
+                    interpret=cfg.kernel_interpret, **kwargs)
+            if cfg.decode_impl != "ref":
+                raise ValueError(f"Unknown decode impl {cfg.decode_impl!r}")
+            if cfg.kv_cache_partition is not None:
+                kv_spec = tuple(cfg.kv_cache_partition)
+                # logits (B, Hkv, G, S', T): batch + cache-seq axes from config.
+                spec = (kv_spec[0], None, None, None, kv_spec[1])
+                kwargs["logits_shard_fn"] = lambda l: self._shard(l, spec)
             return kernel_ref.reference_attention(q, k, v, **kwargs)
         if cfg.impl == "flash":
             from repro.kernels import ops as kernel_ops
@@ -201,8 +248,18 @@ class MultiheadAttention(BaseLayer):
         return cache
 
     def prefill(self, state: Dict[str, Any], x: jax.Array,
-                positions: Optional[jax.Array] = None) -> Tuple[Dict[str, Any], jax.Array]:
-        """Runs the full forward over the prompt and fills the cache."""
+                positions: Optional[jax.Array] = None,
+                length: Optional[jax.Array] = None
+                ) -> Tuple[Dict[str, Any], jax.Array]:
+        """Runs the full forward over the prompt and fills the cache.
+
+        ``length`` (optional scalar) marks only the first ``length`` tokens
+        of ``x`` as real: trailing bucket padding is neither written to the
+        cache (its scatter indices land out of bounds and are dropped) nor
+        counted in ``index``. This is what lets the serving engine admit
+        prompts through a small set of power-of-two padded shapes (one
+        compile per bucket) without polluting the cache.
+        """
         cfg = self.config
         B, S, _ = x.shape
         if positions is None:
@@ -212,13 +269,20 @@ class MultiheadAttention(BaseLayer):
         out = out.reshape(B, S, cfg.num_heads * cfg.head_dim)
         y = self.o_proj(out)
 
+        length = jnp.asarray(S if length is None else length, jnp.int32)
         T = state["k"].shape[1]
-        if S >= T:
-            # Keep only the last T tokens (ring layout by absolute position).
-            k_keep, v_keep, p_keep = k[:, -T:], v[:, -T:], positions[-T:]
+        if S > T:
+            # Ring layout: keep the last T *valid* tokens.
+            start = jnp.clip(length - T, 0, S - T)
+            k_keep = jax.lax.dynamic_slice_in_dim(k, start, T, axis=1)
+            v_keep = jax.lax.dynamic_slice_in_dim(v, start, T, axis=1)
+            p_keep = jax.lax.dynamic_slice_in_dim(positions, start, T, axis=0)
         else:
             k_keep, v_keep, p_keep = k, v, positions
-        slots = p_keep % T
+        valid = p_keep < length
+        # Invalid tokens scatter to index T (out of bounds -> dropped), so
+        # bucket padding never overwrites live ring slots.
+        slots = jnp.where(valid, p_keep % T, T)
         new_k = state["k"].at[:, slots].set(k_keep.astype(cfg.kv_cache_dtype))
         new_v = state["v"].at[:, slots].set(v_keep.astype(cfg.kv_cache_dtype))
         new_pos = state["pos"].at[:, slots].set(p_keep.astype(jnp.int32)[None, :])
@@ -226,7 +290,7 @@ class MultiheadAttention(BaseLayer):
             "k": self._shard(new_k, cfg.kv_cache_partition),
             "v": self._shard(new_v, cfg.kv_cache_partition),
             "pos": new_pos,
-            "index": jnp.full((B,), S, jnp.int32),
+            "index": jnp.broadcast_to(length, (B,)),
         }
         return new_state, y
 

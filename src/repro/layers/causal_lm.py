@@ -137,9 +137,13 @@ class CausalLM(BaseLayer):
     def init_states(self, batch_size: int, max_len: int):
         return self.decoder.init_states(batch_size, max_len)
 
-    def prefill(self, state, input_ids=None, *, input_embeddings=None):
+    def prefill(self, state, input_ids=None, *, input_embeddings=None,
+                length=None):
+        """``length`` (optional scalar): number of real prompt tokens; the
+        rest of ``input_ids`` is bucket padding that must not enter any
+        layer's cache/recurrent state (continuous-batching admission)."""
         return self.decoder.prefill(
-            state, input_ids, input_embeddings=input_embeddings)
+            state, input_ids, input_embeddings=input_embeddings, length=length)
 
     def extend_step(self, state, ids_step):
         return self.decoder.extend_step(state, ids_step)

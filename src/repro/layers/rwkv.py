@@ -160,13 +160,27 @@ class RWKV6TimeMix(BaseLayer):
             "index": jnp.zeros((batch_size,), jnp.int32),
         }
 
-    def prefill(self, state, x, positions=None):
+    def prefill(self, state, x, positions=None, length=None):
         r, k, v, w, g = self._projections(x, state["shift"])
+        if length is not None:
+            # Bucket padding must leave the wkv state exact: an invalid step
+            # with decay w=1 and key k=0 is the identity transition
+            # (s <- 1*s + 0*v^T, zero bonus).
+            length = jnp.asarray(length, jnp.int32)
+            valid = (jnp.arange(x.shape[1]) < length)[None, :, None, None]
+            k = jnp.where(valid, k, 0.0)
+            w = jnp.where(valid, w, 1.0)
         out, wkv_state = self._wkv(r, k, v, w, state["wkv"])
         y = self._group_norm(out).astype(x.dtype) * g
         y = y @ self.state["out_proj"].astype(x.dtype)
-        new_state = {"shift": x[:, -1:].astype(state["shift"].dtype),
-                     "wkv": wkv_state, "index": state["index"] + x.shape[1]}
+        if length is None:
+            shift = x[:, -1:]
+            new_index = state["index"] + x.shape[1]
+        else:
+            shift = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)
+            new_index = state["index"] + length
+        new_state = {"shift": shift.astype(state["shift"].dtype),
+                     "wkv": wkv_state, "index": new_index}
         return new_state, y
 
     def extend_step(self, state, x_step):
@@ -225,9 +239,14 @@ class RWKV6ChannelMix(BaseLayer):
     def init_states(self, batch_size, max_len):
         return {"shift": jnp.zeros((batch_size, 1, self.config.input_dim), jnp.bfloat16)}
 
-    def prefill(self, state, x, positions=None):
+    def prefill(self, state, x, positions=None, length=None):
         y = self._core(x, state["shift"])
-        return {"shift": x[:, -1:].astype(state["shift"].dtype)}, y
+        if length is None:
+            shift = x[:, -1:]
+        else:
+            shift = jax.lax.dynamic_slice_in_dim(
+                x, jnp.asarray(length, jnp.int32) - 1, 1, axis=1)
+        return {"shift": shift.astype(state["shift"].dtype)}, y
 
     def extend_step(self, state, x_step):
         y = self._core(x_step, state["shift"])
@@ -275,10 +294,12 @@ class RWKV6Block(BaseLayer):
         return {"tm": self.time_mix.init_states(batch_size, max_len),
                 "cm": self.channel_mix.init_states(batch_size, max_len)}
 
-    def prefill(self, state, x, positions=None):
-        tm_state, h = self.time_mix.prefill(state["tm"], self.ln1(x), positions=positions)
+    def prefill(self, state, x, positions=None, length=None):
+        tm_state, h = self.time_mix.prefill(
+            state["tm"], self.ln1(x), positions=positions, length=length)
         x = x + h
-        cm_state, h2 = self.channel_mix.prefill(state["cm"], self.ln2(x))
+        cm_state, h2 = self.channel_mix.prefill(state["cm"], self.ln2(x),
+                                                length=length)
         return {"tm": tm_state, "cm": cm_state}, x + h2
 
     def extend_step(self, state, x_step):

@@ -132,18 +132,27 @@ class MambaMixer(BaseLayer):
         a_r, b_r = right
         return a_l * a_r, a_r * b_l + b_r
 
-    def _scan_chunk(self, h, xc):
+    def _scan_chunk(self, h, xc, valid=None):
         """One chunk: derive SSM params from x_conv, parallel-prefix within
         the chunk, contract to y immediately (the (B,C,di,N) states never
-        leave the chunk)."""
+        leave the chunk). ``valid`` (optional (1|B, C) bool) turns padding
+        steps into identity transitions (decay 1, input 0) so bucket-padded
+        prefill leaves the recurrent state exact."""
         a_bar, bx, C_mat = self._ssm_params(xc)
+        if valid is not None:
+            a_bar = jnp.where(valid[..., None, None], a_bar, 1.0)
+            bx = jnp.where(valid[..., None, None], bx, 0.0)
         bx = bx.at[:, 0].add(a_bar[:, 0] * h)
         _, h_all = jax.lax.associative_scan(self._combine, (a_bar, bx), axis=1)
         y = jnp.einsum("bsdn,bsn->bsd", h_all, C_mat)
         return h_all[:, -1], y
 
-    def _run(self, x: jax.Array, h0: jax.Array, conv_init: jax.Array):
-        """Returns (y, h_final, conv_tail)."""
+    def _run(self, x: jax.Array, h0: jax.Array, conv_init: jax.Array,
+             valid: Optional[jax.Array] = None,
+             length: Optional[jax.Array] = None):
+        """Returns (y, h_final, conv_tail). With ``valid``/``length`` set,
+        only the first ``length`` tokens update the recurrence and the conv
+        tail is taken at the valid frontier (bucket-padded admission)."""
         cfg = self.config
         xz = x @ self.state["in_proj"].astype(x.dtype)
         # Constrain BEFORE the split so neither half (nor their backward
@@ -157,7 +166,7 @@ class MambaMixer(BaseLayer):
         B, S, di = x_conv.shape
         C = cfg.scan_chunk_size
         if S % C != 0 or S <= C:
-            h_final, y = self._scan_chunk(h0, x_conv)
+            h_final, y = self._scan_chunk(h0, x_conv, valid)
         else:
             n = S // C
             xs = jnp.moveaxis(x_conv.reshape(B, n, C, di), 1, 0)
@@ -167,9 +176,20 @@ class MambaMixer(BaseLayer):
             hp = self.config.hidden_partition
             if hp:
                 xs = self._shard(xs, (None,) + tuple(hp))
-            body = jax.checkpoint(self._scan_chunk, prevent_cse=False)
-            h_final, ys = jax.lax.scan(body, h0, xs,
-                                       unroll=cfg.scan_unroll_chunks)
+            if valid is not None:
+                # Masked admission prefill goes through the same chunked
+                # scan — long buckets must not materialize (B,S,di,N) states.
+                Bv = valid.shape[0]
+                vs = jnp.moveaxis(valid.reshape(Bv, n, C), 1, 0)
+                body = jax.checkpoint(
+                    lambda h, xv: self._scan_chunk(h, xv[0], xv[1]),
+                    prevent_cse=False)
+                h_final, ys = jax.lax.scan(body, h0, (xs, vs),
+                                           unroll=cfg.scan_unroll_chunks)
+            else:
+                body = jax.checkpoint(self._scan_chunk, prevent_cse=False)
+                h_final, ys = jax.lax.scan(body, h0, xs,
+                                           unroll=cfg.scan_unroll_chunks)
             y = jnp.moveaxis(ys, 0, 1).reshape(B, S, di)
 
         y = y + self.state["D"] * x_conv.astype(jnp.float32)
@@ -179,7 +199,15 @@ class MambaMixer(BaseLayer):
 
         W = cfg.conv_width
         tail_src = jnp.concatenate([conv_init.astype(x_in.dtype), x_in], axis=1)
-        conv_tail = tail_src[:, -(W - 1):] if W > 1 else tail_src[:, :0]
+        if W <= 1:
+            conv_tail = tail_src[:, :0]
+        elif length is None:
+            conv_tail = tail_src[:, -(W - 1):]
+        else:
+            # Last W-1 inputs before the valid frontier: token p of x_in sits
+            # at tail_src index (W-1)+p, so the window starts at ``length``.
+            conv_tail = jax.lax.dynamic_slice_in_dim(tail_src, length, W - 1,
+                                                     axis=1)
         return out, h_final, conv_tail
 
     # ------------------------------------------------------------- interface
@@ -205,10 +233,18 @@ class MambaMixer(BaseLayer):
             "index": jnp.zeros((batch_size,), jnp.int32),
         }
 
-    def prefill(self, state, x, positions=None):
-        y, h, conv = self._run(x, state["h"], state["conv"])
+    def prefill(self, state, x, positions=None, length=None):
+        if length is None:
+            y, h, conv = self._run(x, state["h"], state["conv"])
+            new_index = state["index"] + x.shape[1]
+        else:
+            length = jnp.asarray(length, jnp.int32)
+            valid = (jnp.arange(x.shape[1]) < length)[None, :]
+            y, h, conv = self._run(x, state["h"], state["conv"],
+                                   valid=valid, length=length)
+            new_index = state["index"] + length
         return {"h": h, "conv": conv.astype(state["conv"].dtype),
-                "index": state["index"] + x.shape[1]}, y
+                "index": new_index}, y
 
     def extend_step(self, state, x_step):
         """Sequential decode for S' >= 1 tokens (scan over steps)."""

@@ -104,10 +104,11 @@ class TransformerLayer(BaseLayer):
     def init_states(self, batch_size: int, max_len: int):
         return self.self_attention.init_states(batch_size, max_len)
 
-    def prefill(self, state, x, positions=None):
+    def prefill(self, state, x, positions=None, length=None):
         cfg = self.config
         x = self._shard(x, cfg.activation_partition)
-        state, h = self.self_attention.prefill(state, self.attn_norm(x), positions=positions)
+        state, h = self.self_attention.prefill(
+            state, self.attn_norm(x), positions=positions, length=length)
         if cfg.use_post_attention_norm:
             h = self.post_attn_norm(h)
         x = x + h
@@ -181,10 +182,11 @@ class Block(BaseLayer):
         return {n: getattr(self, n).init_states(batch_size, max_len)
                 for n in self._layer_names}
 
-    def prefill(self, state, x, positions=None):
+    def prefill(self, state, x, positions=None, length=None):
         new_state = {}
         for n in self._layer_names:
-            new_state[n], x = getattr(self, n).prefill(state[n], x, positions=positions)
+            new_state[n], x = getattr(self, n).prefill(
+                state[n], x, positions=positions, length=length)
         return new_state, x
 
     def extend_step(self, state, x_step):
@@ -248,7 +250,8 @@ class Repeat(BaseLayer):
 
     # --- scan plumbing ---------------------------------------------------------
 
-    def _scan(self, fn_name: str, carry_x, *, per_layer_state=None, positions=None):
+    def _scan(self, fn_name: str, carry_x, *, per_layer_state=None,
+              positions=None, length=None):
         """Runs ``layer.<fn_name>`` over stacked params via lax.scan.
 
         carry: activations; xs: (params_i[, state_i][, key_i]);
@@ -274,6 +277,8 @@ class Repeat(BaseLayer):
                 inputs = {"state": xs["state"], "x_step": x}
             if positions is not None and fn_name in ("forward", "prefill"):
                 inputs["positions"] = positions
+            if length is not None and fn_name == "prefill":
+                inputs["length"] = length
             out, collection = functional(
                 self.layer,
                 state=params_i,
@@ -332,8 +337,9 @@ class Repeat(BaseLayer):
         return jax.tree.map(lambda a: jnp.stack([a] * L, axis=0)
                             if hasattr(a, "shape") else a, proto)
 
-    def prefill(self, state, x, positions=None):
-        y, ys = self._scan("prefill", x, per_layer_state=state, positions=positions)
+    def prefill(self, state, x, positions=None, length=None):
+        y, ys = self._scan("prefill", x, per_layer_state=state,
+                           positions=positions, length=length)
         self._reemit(ys["side"])
         return ys["state"], y
 
@@ -378,10 +384,11 @@ class StackedTransformer(BaseLayer):
     def init_states(self, batch_size, max_len):
         return {n: getattr(self, n).init_states(batch_size, max_len) for n in self._names}
 
-    def prefill(self, state, x, positions=None):
+    def prefill(self, state, x, positions=None, length=None):
         out = {}
         for n in self._names:
-            out[n], x = getattr(self, n).prefill(state[n], x, positions=positions)
+            out[n], x = getattr(self, n).prefill(
+                state[n], x, positions=positions, length=length)
         return out, x
 
     def extend_step(self, state, x_step):
@@ -473,11 +480,12 @@ class Decoder(BaseLayer):
     def init_states(self, batch_size: int, max_len: int):
         return self.stack.init_states(batch_size, max_len)
 
-    def prefill(self, state, input_ids=None, *, input_embeddings=None, positions=None):
+    def prefill(self, state, input_ids=None, *, input_embeddings=None,
+                positions=None, length=None):
         x = self._embed(input_ids, input_embeddings)
         if positions is None:
             positions = jnp.arange(x.shape[1])
-        state, h = self.stack.prefill(state, x, positions=positions)
+        state, h = self.stack.prefill(state, x, positions=positions, length=length)
         return state, self._head(h)
 
     def extend_step(self, state, ids_step):

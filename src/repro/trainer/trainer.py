@@ -20,6 +20,7 @@ from repro.checkpoint.checkpointer import Checkpointer
 from repro.core.config import REQUIRED, ConfigBase, Required, config_class
 from repro.core.module import Module, functional, no_context
 from repro.core.utils import (
+    make_mesh,
     named_sharding,
     resolve_spec,
     set_mesh,
@@ -106,9 +107,7 @@ class SpmdTrainer(Module):
                 raise RuntimeError(
                     f"mesh {cfg.mesh_shape} needs {n} devices, "
                     f"have {len(jax.devices())}")
-            self._mesh = jax.make_mesh(
-                tuple(cfg.mesh_shape), tuple(cfg.mesh_axis_names),
-                axis_types=(jax.sharding.AxisType.Auto,) * len(cfg.mesh_shape))
+            self._mesh = make_mesh(cfg.mesh_shape, cfg.mesh_axis_names)
         return self._mesh
 
     @no_context

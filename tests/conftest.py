@@ -1,0 +1,160 @@
+"""Test-suite conftest: no-network fallback shim for ``hypothesis``.
+
+Some environments (including the CI container) don't ship ``hypothesis``;
+the property tests then degraded to hard collection errors for whole test
+modules. When the real library is importable we use it untouched; otherwise
+we install a tiny deterministic stand-in into ``sys.modules`` *before* test
+modules import it. The shim runs each ``@given`` test over ``max_examples``
+pseudo-random draws from a fixed seed — weaker than real shrinking/coverage,
+but it keeps the properties exercised everywhere.
+"""
+
+import random
+import sys
+import types
+
+
+def _install_hypothesis_shim():
+    class _Strategy:
+        """Minimal SearchStrategy: a callable drawing one example."""
+
+        def __init__(self, draw_fn):
+            self._draw = draw_fn
+
+        def example_with(self, rng):
+            return self._draw(rng)
+
+        def map(self, fn):
+            return _Strategy(lambda rng: fn(self._draw(rng)))
+
+        def filter(self, pred):
+            def draw(rng):
+                for _ in range(1000):
+                    x = self._draw(rng)
+                    if pred(x):
+                        return x
+                raise ValueError("filter predicate never satisfied")
+
+            return _Strategy(draw)
+
+    def integers(min_value=-(2 ** 31), max_value=2 ** 31 - 1):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def floats(min_value=None, max_value=None, *, allow_nan=True,
+               allow_infinity=True, width=64):
+        lo = -1e6 if min_value is None else min_value
+        hi = 1e6 if max_value is None else max_value
+        return _Strategy(lambda rng: rng.uniform(lo, hi))
+
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+    def text(alphabet="abcdefghijklmnopqrstuvwxyz", min_size=0, max_size=10):
+        chars = list(alphabet)
+
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return "".join(chars[rng.randrange(len(chars))] for _ in range(n))
+
+        return _Strategy(draw)
+
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.example_with(rng) for _ in range(n)]
+
+        return _Strategy(draw)
+
+    def just(value):
+        return _Strategy(lambda rng: value)
+
+    def one_of(*strategies):
+        flat = []
+        for s in strategies:
+            flat.extend(s if isinstance(s, (list, tuple)) else [s])
+        return _Strategy(
+            lambda rng: flat[rng.randrange(len(flat))].example_with(rng))
+
+    def tuples(*strategies):
+        return _Strategy(
+            lambda rng: tuple(s.example_with(rng) for s in strategies))
+
+    def composite(fn):
+        def builder(*args, **kwargs):
+            def draw_one(rng):
+                draw = lambda strat: strat.example_with(rng)  # noqa: E731
+                return fn(draw, *args, **kwargs)
+
+            return _Strategy(draw_one)
+
+        return builder
+
+    _DEFAULT_MAX_EXAMPLES = 10
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strategies, **kw_strategies):
+        def deco(fn):
+            def wrapper(*outer_args, **outer_kwargs):
+                # outer_* come from pytest (fixtures / parametrize) and are
+                # forwarded ahead of the shim-drawn values, matching real
+                # hypothesis' argument ordering. @settings may sit above OR
+                # below @given, so check the wrapper's attribute too.
+                n = getattr(wrapper, "_shim_max_examples",
+                            getattr(fn, "_shim_max_examples",
+                                    _DEFAULT_MAX_EXAMPLES))
+                for i in range(n):
+                    rng = random.Random(0xA11CE + 7919 * i)
+                    args = [s.example_with(rng) for s in strategies]
+                    kwargs = {k: s.example_with(rng)
+                              for k, s in kw_strategies.items()}
+                    fn(*outer_args, *args, **outer_kwargs, **kwargs)
+
+            # NOTE: no functools.wraps — pytest must see a zero-arg signature
+            # (the original's params would otherwise look like fixtures).
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper._shim_wrapped = fn
+            return wrapper
+
+        return deco
+
+    def assume(condition):
+        if not condition:
+            raise AssertionError("hypothesis-shim: assume() failed "
+                                 "(shim cannot discard examples)")
+
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.assume = assume
+    mod.HealthCheck = types.SimpleNamespace(all=lambda: [])
+    mod.__is_shim__ = True
+
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name, obj in [("integers", integers), ("floats", floats),
+                      ("booleans", booleans), ("sampled_from", sampled_from),
+                      ("text", text), ("lists", lists), ("just", just),
+                      ("one_of", one_of), ("tuples", tuples),
+                      ("composite", composite)]:
+        setattr(st_mod, name, obj)
+    mod.strategies = st_mod
+
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st_mod
+
+
+try:  # pragma: no cover - depends on environment
+    import hypothesis  # noqa: F401
+except ImportError:
+    _install_hypothesis_shim()

@@ -61,8 +61,9 @@ def test_extrapolate_affine():
 
 
 def test_resolve_spec_drops_unknown_axes():
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.core.utils import make_mesh
+
+    mesh = make_mesh((1,), ("data",))
     spec = resolve_spec((("pod", "data"), None, "model"), mesh)
     assert spec == jax.sharding.PartitionSpec("data", None, None)
 

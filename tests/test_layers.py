@@ -207,7 +207,10 @@ def test_repeat_remat_same_loss_and_grads():
     lb, gb = jax.value_and_grad(loss_fn)(state, cfg_b)
     np.testing.assert_allclose(la, lb, rtol=1e-6)
     for (pa, pb) in zip(jax.tree.leaves(ga), jax.tree.leaves(gb)):
-        np.testing.assert_allclose(np.asarray(pa), np.asarray(pb), atol=1e-5)
+        # Remat recomputes the forward, which XLA may fuse/reassociate
+        # differently; grads O(10-100) match to ~1e-4 absolute.
+        np.testing.assert_allclose(np.asarray(pa), np.asarray(pb), atol=1e-4,
+                                   rtol=1e-4)
 
 
 def _tiny_lm_cfg(vocab=64, dim=32, L=2):
