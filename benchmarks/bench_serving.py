@@ -1,0 +1,117 @@
+"""Serving load benchmark: Poisson arrivals through the paged gateway.
+
+Measures the serving subsystem end to end (paper §6 at serving
+granularity): requests with mixed prompt lengths arrive as a Poisson
+process at the :class:`ServingGateway`, which chunks prefills, pages KV,
+and preempts under pressure. Reported per arch:
+
+  * p50/p99 TTFT (submit -> first streamed token) and TPOT,
+  * output tokens/s over the loaded window,
+  * preemption/restore counts and peak KV-page utilization.
+
+Both a warm-up pass (compilation) and the timed pass run the same
+workload shape, so the numbers are steady-state scheduling + decode, not
+jit. ``run()`` stashes the payload in ``LAST_JSON``; ``benchmarks/run.py``
+persists it as ``BENCH_serving.json`` — the tracked perf artifact for the
+serving path.
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.core.config import visit_config
+from repro.inference.engine import InferenceEngine
+from repro.serving import SamplingParams, ServingGateway
+
+BENCH_ARCHS = ["qwen2-1.5b", "gemma2-27b"]
+
+N_REQUESTS = 12
+MEAN_INTERARRIVAL_S = 0.02  # Poisson arrival rate ~50 req/s
+PAGE_SIZE = 8
+SLOTS = 6
+
+LAST_JSON = None
+
+
+def _paged_engine(arch, max_len=64, slots=SLOTS):
+    """Registry smoke model with the paged-KV serving config: half the
+    dense engine's full-residency pages, so the load exercises paging."""
+    spec = registry.get_spec(arch)
+    cfg = spec.make_smoke()
+    n_logical = -(-max_len // PAGE_SIZE)
+    num_pages = 1 + slots * n_logical // 2
+
+    def to_paged(_, c):
+        if getattr(c, "kv_cache_layout", None) == "dense" \
+                and getattr(c, "sliding_window", None) is None:
+            c.set(kv_cache_layout="paged", page_size=PAGE_SIZE,
+                  num_pages=num_pages)
+
+    visit_config(cfg, to_paged)
+    engine = InferenceEngine.default_config().set(
+        name="engine", model=cfg, max_len=max_len, slots=slots).instantiate()
+    params = engine.model.initialize_parameters_recursively(jax.random.PRNGKey(0))
+    engine.load(params)
+    return engine, cfg.decoder.vocab_size
+
+
+def _drive(engine, vocab, seed):
+    """One Poisson-arrival workload through a fresh gateway."""
+    rng = np.random.default_rng(seed)
+    gw = ServingGateway(engine, prefill_chunk=8, seed=seed)
+    arrivals = np.cumsum(rng.exponential(MEAN_INTERARRIVAL_S, N_REQUESTS))
+    prompts = [rng.integers(0, vocab, size=(int(rng.integers(3, 33)),))
+               for _ in range(N_REQUESTS)]
+    samplings = [SamplingParams(max_new_tokens=int(rng.integers(4, 12)),
+                                temperature=0.8 * (i % 3 == 0))
+                 for i in range(N_REQUESTS)]
+    t0 = time.perf_counter()
+    pending = list(range(N_REQUESTS))
+    peak_util = 0.0
+    while pending or gw.scheduler.has_work:
+        now = time.perf_counter() - t0
+        while pending and arrivals[pending[0]] <= now:
+            i = pending.pop(0)
+            gw.submit(prompts[i], sampling=samplings[i],
+                      priority=int(i % 2))
+        if gw.scheduler.has_work:
+            gw.step()
+        peak_util = max(peak_util, gw.scheduler.block_utilization)
+    return gw, peak_util
+
+
+def run():
+    global LAST_JSON
+    rows = []
+    payload = {}
+    for arch in BENCH_ARCHS:
+        engine, vocab = _paged_engine(arch)
+        _drive(engine, vocab, seed=1)  # warm-up: compiles chunk/decode fns
+        gw, peak_util = _drive(engine, vocab, seed=2)
+        m = gw.metrics()
+        rows.append((f"serving_ttft_p50/{arch}", m["ttft_p50_s"] * 1e6,
+                     f"p99_us={m['ttft_p99_s'] * 1e6:.0f}"))
+        rows.append((f"serving_tpot_p50/{arch}", m["tpot_p50_s"] * 1e6,
+                     f"p99_us={m['tpot_p99_s'] * 1e6:.0f}"))
+        rows.append((f"serving_throughput/{arch}", m["tokens_per_s"],
+                     f"preemptions={m['preemptions']};"
+                     f"peak_block_util={peak_util:.2f}"))
+        payload[arch] = {
+            "ttft_p50_us": m["ttft_p50_s"] * 1e6,
+            "ttft_p99_us": m["ttft_p99_s"] * 1e6,
+            "tpot_p50_us": m["tpot_p50_s"] * 1e6,
+            "tpot_p99_us": m["tpot_p99_s"] * 1e6,
+            "tokens_per_s": m["tokens_per_s"],
+            "completed": m["completed"],
+            "preemptions": m["preemptions"],
+            "restores": m["restores"],
+            "peak_block_utilization": peak_util,
+            "requests": N_REQUESTS,
+            "slots": SLOTS,
+            "page_size": PAGE_SIZE,
+        }
+    LAST_JSON = payload
+    return rows

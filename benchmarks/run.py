@@ -3,6 +3,8 @@
   bench_loc        — Table 2 (LoC-complexity of RoPE/MoE integration)
   bench_train      — Table 3 (training step time / roofline bounds)
   bench_inference  — Table 4 + Fig 5 (TTFT / TPOT / throughput / cont. batching)
+  bench_serving    — serving load: Poisson arrivals through the paged
+                     gateway (p50/p99 TTFT/TPOT, tokens/s, preemptions)
   bench_scaling    — Fig 4 (single-pod vs multi-pod scaling from dry-runs)
 
 Prints ``name,us_per_call,derived`` CSV. Modules may expose a ``LAST_JSON``
@@ -16,10 +18,17 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import bench_inference, bench_loc, bench_scaling, bench_train
+    from benchmarks import (
+        bench_inference,
+        bench_loc,
+        bench_scaling,
+        bench_serving,
+        bench_train,
+    )
 
     print("name,us_per_call,derived")
-    for mod in (bench_loc, bench_train, bench_inference, bench_scaling):
+    for mod in (bench_loc, bench_train, bench_inference, bench_serving,
+                bench_scaling):
         try:
             rows = mod.run()
         except Exception as e:  # noqa: BLE001

@@ -23,6 +23,11 @@ All jitted callables are built once and cached on the engine, so repeated
 TTFT/TPOT benchmarks (paper Table 4) run on this engine; the decode-step
 attention kernel is selected by ``MultiheadAttention.Config.decode_impl``
 ("ref" | "flash_decode") — a config knob, not a code change (§4.2).
+
+The paged serving subsystem (``repro.serving``: page allocator, chunked
+prefill scheduler, streaming gateway) layers on this engine's builders;
+models configured with ``kv_cache_layout="paged"`` route ``serve()``
+through it automatically.
 """
 
 from __future__ import annotations
@@ -35,13 +40,46 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.config import REQUIRED, ConfigBase, Required, config_class
+from repro.core.config import REQUIRED, ConfigBase, Required, config_class, visit_config
 from repro.core.module import Module, functional, no_context
 
-__all__ = ["InferenceEngine", "Request", "GenerationResult"]
+__all__ = ["InferenceEngine", "Request", "GenerationResult", "sample_tokens",
+           "sample_one"]
 
 # Smallest admission bucket: prompts pad up to the next power of two >= this.
 _MIN_BUCKET = 8
+
+
+def sample_tokens(logits: jax.Array, key: jax.Array, temperatures: jax.Array,
+                  top_ks: jax.Array) -> jax.Array:
+    """Per-slot sampling rule of the fused decode step.
+
+    ``logits`` (S, V); ``temperatures`` (S,) with <= 0 meaning exact greedy
+    argmax; ``top_ks`` (S,) with <= 0 meaning no top-k filtering. Rows are
+    sampled with independent keys split from ``key`` so mixed greedy/sampled
+    requests batch into one program.
+    """
+    S, V = logits.shape
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    k = jnp.where(top_ks > 0, jnp.minimum(top_ks, V), V)  # (S,)
+    sorted_desc = -jnp.sort(-logits, axis=-1)
+    thresh = jnp.take_along_axis(sorted_desc, (k - 1)[:, None], axis=-1)
+    filtered = jnp.where(logits >= thresh, logits, -jnp.inf)
+    temps = jnp.where(temperatures > 0, temperatures, 1.0)[:, None]
+    keys = jax.random.split(key, S)
+    sampled = jax.vmap(jax.random.categorical)(keys, filtered / temps)
+    return jnp.where(temperatures > 0, sampled.astype(jnp.int32), greedy)
+
+
+def sample_one(logits: jax.Array, key: jax.Array, temperature: float,
+               top_k: int) -> Tuple[int, jax.Array]:
+    """Eager single-sequence first-token sampling (prefill/admission path):
+    the same rule as :func:`sample_tokens`, returning (token, new_key)."""
+    key, sub = jax.random.split(key)
+    tok = sample_tokens(logits[None, :], sub,
+                        jnp.asarray([temperature], jnp.float32),
+                        jnp.asarray([top_k], jnp.int32))
+    return int(tok[0]), key
 
 
 @dataclasses.dataclass
@@ -50,6 +88,7 @@ class Request:
     prompt: np.ndarray  # (prompt_len,) int32
     max_new_tokens: int = 16
     temperature: float = 0.0  # 0 = greedy
+    top_k: int = 0  # 0 = no top-k filtering (only applies when sampling)
     arrival_time: float = 0.0
 
 
@@ -77,6 +116,44 @@ class InferenceEngine(Module):
         # Jitted callables, built once per engine: repeated generate()/serve()
         # calls reuse the jit trace/compile caches instead of recompiling.
         self._jit_fns: Dict[Any, Callable] = {}
+
+    @no_context
+    def uses_paged_cache(self) -> bool:
+        """True if any attention layer in the model is configured with the
+        paged KV layout (serving then routes through repro.serving)."""
+        found = []
+
+        def check(_, c):
+            if getattr(c, "kv_cache_layout", None) == "paged":
+                found.append(True)
+
+        visit_config(self.config.model, check)
+        return bool(found)
+
+    @no_context
+    def _check_paged_generate_capacity(self, batch_size: int):
+        """generate()/prefill need full-residency identity page tables; a
+        pool provisioned below that (the serving configuration) would
+        silently drop every KV write. Fail loudly instead."""
+        cfg = self.config
+        bad = []
+
+        def check(path, c):
+            if getattr(c, "kv_cache_layout", None) != "paged" \
+                    or c.num_pages is None:
+                return  # num_pages=None sizes the pool to full residency
+            need = 1 + batch_size * -(-cfg.max_len // c.page_size)
+            if c.num_pages < need:
+                bad.append(f"{path}: num_pages={c.num_pages} < {need}")
+
+        visit_config(cfg.model, check)
+        if bad:
+            raise ValueError(
+                f"paged KV pool is below full residency for batch "
+                f"{batch_size} x max_len {cfg.max_len} — generate() would "
+                f"drop KV writes through unmapped page tables. Use the "
+                f"serving Scheduler/Gateway (which allocates tables on "
+                f"demand) or raise num_pages: {bad[:3]}")
 
     # ----------------------------------------------------------------- setup
 
@@ -175,6 +252,7 @@ class InferenceEngine(Module):
         dispatch. Returns (tokens (B, max_new_tokens), timing metrics)."""
         assert self._params is not None, "call load() first"
         B = prompts.shape[0]
+        self._check_paged_generate_capacity(B)
         cache = self.init_cache(B)
         prefill = self._jit("prefill", self.prefill_fn)
         greedy = temperature <= 0
@@ -203,10 +281,15 @@ class InferenceEngine(Module):
 
     @no_context
     def batch_axes(self):
-        """Per-leaf batch-axis map: the axis where init_cache(1) and
-        init_cache(slots) shapes differ (-1 = no batch axis / shared leaf).
-        Caches are opaque pytrees; this is the only structural fact
-        admission splicing needs."""
+        """Per-leaf batch-axis map: the axis where init_cache shapes at two
+        different batch sizes differ (-1 = no batch axis / shared leaf, e.g.
+        a paged KV pool of fixed ``num_pages``). Caches are opaque pytrees;
+        this is the only structural fact admission splicing needs.
+
+        Detection compares B=1 against B=max(slots, 2): comparing 1 vs 1
+        (a single-slot engine) would see identical shapes everywhere and
+        silently mark every leaf shared — dropping the admission splice.
+        """
         cfg = self.config
         model = self.model
 
@@ -215,7 +298,7 @@ class InferenceEngine(Module):
                                    inputs=(B, cfg.max_len), method="init_states")[0]
             return jax.eval_shape(f)
 
-        s1, sN = shapes(1), shapes(cfg.slots)
+        s1, sN = shapes(1), shapes(max(cfg.slots, 2))
 
         def axis(a, b):
             for i, (x, y) in enumerate(zip(a.shape, b.shape)):
@@ -238,7 +321,7 @@ class InferenceEngine(Module):
     @no_context
     def _admit_fn(self) -> Callable:
         """(params, batch_cache, padded_prompt (1,L), prompt_len, slot)
-        -> (batch_cache, first_token).
+        -> (batch_cache, last_logits (V,)).
 
         One jitted program per bucket L: prefills a fresh single-slot cache
         (bucket padding excluded via ``length``) and splices every leaf into
@@ -268,26 +351,62 @@ class InferenceEngine(Module):
                     bc, c.astype(bc.dtype), slot, axis=ax)
 
             new_cache = jax.tree.map(splice, batch_cache, c1, axes)
-            return new_cache, jnp.argmax(last[0], axis=-1).astype(jnp.int32)
+            return new_cache, last[0]
 
         return admit
 
     @no_context
-    def _serve_decode_fn(self) -> Callable:
-        """(params, cache, ids_step (S,1)) -> (cache, next_tokens (S,)).
+    def _serve_decode_fn(self, sampling: bool = False) -> Callable:
+        """Fused decode step for continuous batching.
 
-        Greedy argmax fused into the step so the host transfers S ints per
-        step instead of the full (S, V) logits."""
+        ``sampling=False``: (params, cache, ids_step (S,1)) ->
+        (cache, next_tokens (S,)) — greedy argmax fused into the step so the
+        host transfers S ints instead of the full (S, V) logits.
+
+        ``sampling=True``: (params, cache, ids_step, key, temperatures (S,),
+        top_ks (S,), active (S,) bool) -> (cache, next_tokens, new_key) —
+        per-slot temperature/top-k sampling fused on device
+        (:func:`sample_tokens`); rows with temperature <= 0 stay exact
+        greedy. Inactive slots keep their pre-step state: every per-slot
+        cache leaf is selected back to its old value, so a slot that is
+        empty or mid-chunked-prefill is not advanced by the pad token fed
+        in its row. (Shared page-pool leaves pass through: an inactive
+        slot's write lands in its own pages at the position its next real
+        chunk overwrites before attending — or is dropped outright if that
+        page is unmapped — so pools self-heal.)
+        """
         serve_step = self.serve_step_fn()
 
-        def decode(params, cache, ids_step):
-            cache, logits = serve_step(params, cache, ids_step)
-            return cache, jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if not sampling:
+            def decode(params, cache, ids_step):
+                cache, logits = serve_step(params, cache, ids_step)
+                return cache, jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
-        return decode
+            return decode
+
+        axes = self.batch_axes()
+
+        def decode_sampling(params, cache, ids_step, key, temperatures,
+                            top_ks, active):
+            new_cache, logits = serve_step(params, cache, ids_step)
+
+            def sel(new, old, ax):
+                if ax < 0:
+                    return new
+                shape = [1] * new.ndim
+                shape[ax] = active.shape[0]
+                return jnp.where(active.reshape(shape), new, old)
+
+            new_cache = jax.tree.map(sel, new_cache, cache, axes)
+            key, sub = jax.random.split(key)
+            toks = sample_tokens(logits, sub, temperatures, top_ks)
+            return new_cache, toks, key
+
+        return decode_sampling
 
     @no_context
-    def serve(self, requests: List[Request]) -> List[GenerationResult]:
+    def serve(self, requests: List[Request], *, seed: int = 0
+              ) -> List[GenerationResult]:
         """Slot-based continuous batching.
 
         All slots decode together each step; finished slots are refilled from
@@ -296,18 +415,35 @@ class InferenceEngine(Module):
         ("pos"/"index") make mid-flight admission exact. Model code is
         untouched — the cache is an opaque pytree (paper §6).
 
-        Serving decodes greedily: ``Request.temperature`` is currently
-        ignored (per-slot sampling inside the fused decode step is future
-        work); use :meth:`generate` for temperature sampling.
+        Per-request ``temperature``/``top_k`` are honored slot-wise inside
+        the fused decode step (:func:`sample_tokens`): requests with
+        temperature 0 decode exact greedy while sampled requests share the
+        same batch. Models with ``kv_cache_layout="paged"`` delegate to the
+        iteration-level :class:`repro.serving.Scheduler` (chunked prefill +
+        page allocation — the dense slot path here would drop pool writes).
         """
         assert self._params is not None
+        if self.uses_paged_cache():
+            from repro.serving.scheduler import Scheduler, ServeRequest
+
+            sched = Scheduler(self, seed=seed)
+            return sched.run([
+                ServeRequest(request_id=r.request_id, prompt=r.prompt,
+                             max_new_tokens=r.max_new_tokens,
+                             temperature=r.temperature, top_k=r.top_k,
+                             arrival_time=r.arrival_time)
+                for r in requests])
         cfg = self.config
         S = cfg.slots
-        queue = sorted(requests, key=lambda r: r.arrival_time)
+        # Stable FCFS: ties on arrival_time (the common case for batch
+        # submission) keep request order instead of Python-sort whims.
+        queue = sorted(requests, key=lambda r: (r.arrival_time, r.request_id))
         results: Dict[int, GenerationResult] = {}
+        key = jax.random.PRNGKey(seed)
 
         admit_fn = self._jit("admit", self._admit_fn, donate_argnums=(1,))
-        decode = self._jit("serve_decode", self._serve_decode_fn,
+        decode = self._jit("serve_decode_sampling",
+                           lambda: self._serve_decode_fn(sampling=True),
                            donate_argnums=(1,))
         params = self._params
 
@@ -317,22 +453,25 @@ class InferenceEngine(Module):
         slot_t0: List[float] = [0.0] * S
 
         def admit(slot: int, req: Request):
-            nonlocal batch_cache
+            nonlocal batch_cache, key
             n = len(req.prompt)
             L = self._bucket_len(n)
             padded = np.full((1, L), cfg.pad_token, np.int32)
             padded[0, :n] = req.prompt
             t0 = time.perf_counter()
-            batch_cache, tok0 = admit_fn(
+            batch_cache, logits = admit_fn(
                 params, batch_cache, jnp.asarray(padded),
                 jnp.asarray(n, jnp.int32), jnp.asarray(slot, jnp.int32))
-            tok0 = int(tok0)
+            tok0, key = sample_one(logits, key, req.temperature, req.top_k)
             ttft = time.perf_counter() - t0
             results[req.request_id] = GenerationResult(req.request_id, [],
                                                        ttft_s=ttft)
             if tok0 == cfg.eos_token or req.max_new_tokens <= 1:
-                # Done at the first token: don't occupy a decode slot.
+                # Done at the first token: don't occupy a decode slot. The
+                # prefill was the whole per-token cost, so tpot = ttft
+                # rather than a missing 0.0.
                 results[req.request_id].tokens = [tok0]
+                results[req.request_id].tpot_s = ttft
                 return
             slot_req[slot] = req
             slot_tokens[slot] = [tok0]
@@ -350,7 +489,16 @@ class InferenceEngine(Module):
             last = np.asarray(
                 [[slot_tokens[s][-1] if slot_req[s] is not None else cfg.pad_token]
                  for s in range(S)], np.int32)
-            batch_cache, nxt_dev = decode(params, batch_cache, jnp.asarray(last))
+            temps = np.asarray(
+                [slot_req[s].temperature if slot_req[s] is not None else 0.0
+                 for s in range(S)], np.float32)
+            topks = np.asarray(
+                [slot_req[s].top_k if slot_req[s] is not None else 0
+                 for s in range(S)], np.int32)
+            occupied = np.asarray([slot_req[s] is not None for s in range(S)])
+            batch_cache, nxt_dev, key = decode(
+                params, batch_cache, jnp.asarray(last), key,
+                jnp.asarray(temps), jnp.asarray(topks), jnp.asarray(occupied))
             nxt = np.asarray(nxt_dev)
             for s in active:
                 req = slot_req[s]

@@ -28,6 +28,15 @@ a single-device or replicated KV cache: with sequence-sharded caches, use
 the reference decode path (``decode_impl="ref"``), which constrains the
 logits sharding so GSPMD keeps the flash-decoding layout; shard_map
 plumbing for this kernel is future work.
+
+Paged variant (:func:`paged_flash_decode_forward`): the KV cache is a shared
+pool of fixed-size pages plus a per-sequence page table. The page table is a
+*scalar-prefetch* operand (``pltpu.PrefetchScalarGridSpec``), so each grid
+step DMAs exactly the physical page named by ``page_tables[b, j]`` — the
+pool is never gathered or reordered in HBM. Unmapped logical pages
+(table entry -1) are clamped to page 0 for the DMA and masked out entirely
+in the kernel body (the mask reads the table, not the page contents, so no
+"null page" content invariant is required for reads).
 """
 
 from __future__ import annotations
@@ -42,7 +51,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.pallas_compat import CompilerParams as _CompilerParams
 
-__all__ = ["flash_decode_forward"]
+__all__ = ["flash_decode_forward", "paged_flash_decode_forward"]
 
 NEG_INF = -1e30
 _LANES = 128  # VREG lane count: scratch second-minor dim
@@ -50,6 +59,57 @@ _LANES = 128  # VREG lane count: scratch second-minor dim
 
 def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
+
+
+def _init_scratch(m_scr, l_scr, acc_scr):
+    m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+    l_scr[...] = jnp.zeros_like(l_scr)
+    acc_scr[...] = jnp.zeros_like(acc_scr)
+
+
+def _online_block_update(q, k, v, mask, m_scr, l_scr, acc_scr, *,
+                         logit_softcap: Optional[float]):
+    """One KV block's online-softmax update against q rows (shared by the
+    contiguous and paged kernels)."""
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    if logit_softcap is not None:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[:, 0:1]  # (R, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # Guard fully-masked rows: keep the exp argument finite.
+    m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+    p = jnp.exp(s - m_safe)
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_safe)
+    alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, alpha)
+
+    l_new = alpha * l_scr[:, 0:1] + jnp.sum(p, axis=1, keepdims=True)
+    pv = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * alpha + pv
+    m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+    l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+
+def _finalize_output(o_ref, l_scr, acc_scr):
+    l = l_scr[:, 0:1]
+    denom = jnp.where(l == 0.0, 1.0, l)
+    o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def _decode_mask(q_pos, k_pos, *, causal, sliding_window):
+    # Empty slots (pos < 0) and padding rows are masked; ring wraparound is
+    # handled for free because masking reads the slot's absolute position.
+    mask = jnp.logical_and(k_pos >= 0, q_pos >= 0)
+    if causal:
+        mask = jnp.logical_and(mask, k_pos <= q_pos)
+    if sliding_window is not None:
+        mask = jnp.logical_and(mask, k_pos > q_pos - sliding_window)
+    return mask
 
 
 def _kernel(
@@ -73,51 +133,77 @@ def _kernel(
 
     @pl.when(kj == 0)
     def _init():
-        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
-        l_scr[...] = jnp.zeros_like(l_scr)
-        acc_scr[...] = jnp.zeros_like(acc_scr)
+        _init_scratch(m_scr, l_scr, acc_scr)
 
     q = q_ref[0, 0].astype(jnp.float32) * scale  # (R, D)
     k = k_ref[0, :, 0, :].astype(jnp.float32)  # (bk, D)
-    s = jax.lax.dot_general(
-        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
-    if logit_softcap is not None:
-        s = logit_softcap * jnp.tanh(s / logit_softcap)
-
-    q_pos = qpos_ref[0][:, None]  # (R, 1)
-    k_pos = kpos_ref[0][None, :]  # (1, bk)
-    # Empty slots (pos < 0) and padding rows are masked; ring wraparound is
-    # handled for free because masking reads the slot's absolute position.
-    mask = jnp.logical_and(k_pos >= 0, q_pos >= 0)
-    if causal:
-        mask = jnp.logical_and(mask, k_pos <= q_pos)
-    if sliding_window is not None:
-        mask = jnp.logical_and(mask, k_pos > q_pos - sliding_window)
-    s = jnp.where(mask, s, NEG_INF)
-
-    m_prev = m_scr[:, 0:1]  # (R, 1)
-    m_cur = jnp.max(s, axis=1, keepdims=True)
-    m_new = jnp.maximum(m_prev, m_cur)
-    # Guard fully-masked rows: keep the exp argument finite.
-    m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
-    p = jnp.exp(s - m_safe)
-    p = jnp.where(mask, p, 0.0)
-    alpha = jnp.exp(m_prev - m_safe)
-    alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, alpha)
-
-    l_new = alpha * l_scr[:, 0:1] + jnp.sum(p, axis=1, keepdims=True)
     v = v_ref[0, :, 0, :].astype(jnp.float32)  # (bk, D)
-    pv = jax.lax.dot_general(
-        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-    acc_scr[...] = acc_scr[...] * alpha + pv
-    m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
-    l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+    mask = _decode_mask(qpos_ref[0][:, None], kpos_ref[0][None, :],
+                        causal=causal, sliding_window=sliding_window)
+    _online_block_update(q, k, v, mask, m_scr, l_scr, acc_scr,
+                         logit_softcap=logit_softcap)
 
     @pl.when(kj == num_kv_blocks - 1)
     def _finalize():
-        l = l_scr[:, 0:1]
-        denom = jnp.where(l == 0.0, 1.0, l)
-        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+        _finalize_output(o_ref, l_scr, acc_scr)
+
+
+def _paged_kernel(
+    tbl_ref,  # (B, N) int32 scalar-prefetch page table, -1 = unmapped
+    q_ref,  # (1, 1, R, D)
+    k_ref,  # (1, page, 1, D): the physical page named by tbl[b, j]
+    v_ref,  # (1, page, 1, D)
+    qpos_ref,  # (1, R) int32, -1 = padding row
+    kpos_ref,  # (1, page) int32 per-token positions of the page, -1 = empty
+    o_ref,  # (1, 1, R, D)
+    m_scr,
+    l_scr,
+    acc_scr,
+    *,
+    num_logical_pages: int,
+    causal: bool,
+    sliding_window: Optional[int],
+    logit_softcap: Optional[float],
+    scale: float,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        _init_scratch(m_scr, l_scr, acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    mask = _decode_mask(qpos_ref[0][:, None], kpos_ref[0][None, :],
+                        causal=causal, sliding_window=sliding_window)
+    # Unmapped logical pages were clamped to physical page 0 for the DMA;
+    # masking on the TABLE entry (not the page contents) drops them exactly.
+    mask = jnp.logical_and(mask, tbl_ref[b, j] >= 0)
+    _online_block_update(q, k, v, mask, m_scr, l_scr, acc_scr,
+                         logit_softcap=logit_softcap)
+
+    @pl.when(j == num_logical_pages - 1)
+    def _finalize():
+        _finalize_output(o_ref, l_scr, acc_scr)
+
+
+def _pack_q_rows(q: jax.Array, q_positions: jax.Array, Hkv: int):
+    """(B, S', Hq, D) -> (B, Hkv, R_pad, D) rows of (s', g) pairs per KV
+    group, plus the per-row positions (-1 = padding row)."""
+    B, Sq, Hq, D = q.shape
+    G = Hq // Hkv
+    R = Sq * G
+    R_pad = _round_up(max(R, 8), 8)
+    # q: (B, S', Hkv*G, D) -> (B, Hkv, S'*G, D); head h = kv * G + g.
+    qr = q.reshape(B, Sq, Hkv, G, D).transpose(0, 2, 1, 3, 4).reshape(B, Hkv, R, D)
+    qpos_rows = jnp.repeat(q_positions, G, axis=1)  # (B, R): row r -> q_pos[r // G]
+    if R_pad != R:
+        qr = jnp.pad(qr, ((0, 0), (0, 0), (0, R_pad - R), (0, 0)))
+        qpos_rows = jnp.pad(qpos_rows, ((0, 0), (0, R_pad - R)),
+                            constant_values=-1)
+    return qr, qpos_rows, R, R_pad
 
 
 def flash_decode_forward(
@@ -143,16 +229,7 @@ def flash_decode_forward(
     q_positions = jnp.broadcast_to(jnp.asarray(q_positions, jnp.int32), (B, Sq))
     k_positions = jnp.broadcast_to(jnp.asarray(k_positions, jnp.int32), (B, T))
 
-    # Rows of one q block: (s', g) pairs for a whole KV group.
-    R = Sq * G
-    R_pad = _round_up(max(R, 8), 8)
-    # q: (B, S', Hkv*G, D) -> (B, Hkv, S'*G, D); head h = kv * G + g.
-    qr = q.reshape(B, Sq, Hkv, G, D).transpose(0, 2, 1, 3, 4).reshape(B, Hkv, R, D)
-    qpos_rows = jnp.repeat(q_positions, G, axis=1)  # (B, R): row r -> q_pos[r // G]
-    if R_pad != R:
-        qr = jnp.pad(qr, ((0, 0), (0, 0), (0, R_pad - R), (0, 0)))
-        qpos_rows = jnp.pad(qpos_rows, ((0, 0), (0, R_pad - R)),
-                            constant_values=-1)
+    qr, qpos_rows, R, R_pad = _pack_q_rows(q, q_positions, Hkv)
 
     block_k = min(block_k, _round_up(T, 8))
     T_pad = _round_up(T, block_k)
@@ -198,5 +275,91 @@ def flash_decode_forward(
     )(qr, k, v, qpos_rows, k_positions)
 
     # (B, Hkv, R, D) -> (B, S', Hq, D).
+    out = out[:, :, :R].reshape(B, Hkv, Sq, G, D).transpose(0, 2, 1, 3, 4)
+    return out.reshape(B, Sq, Hq, D)
+
+
+def paged_flash_decode_forward(
+    q: jax.Array,  # (B, S', Hq, D), S' small (decode steps)
+    k_pool: jax.Array,  # (P, page, Hkv, D) — shared physical page pool
+    v_pool: jax.Array,  # (P, page, Hkv, D)
+    pos_pool: jax.Array,  # (P, page) int32 per-token positions, -1 = empty
+    page_tables: jax.Array,  # (B, N) int32 physical page ids, -1 = unmapped
+    q_positions: jax.Array,  # (B, S') absolute positions of the new tokens
+    *,
+    causal: bool = True,
+    sliding_window: Optional[int] = None,
+    logit_softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Flash-decode over a paged KV cache via scalar-prefetch page tables.
+
+    The grid is (B, Hkv, N logical pages); for grid step (b, h, j) the
+    BlockSpec index map reads ``page_tables[b, j]`` (a prefetched scalar) and
+    DMAs that physical page — one page fetch per KV group, no HBM gather.
+    Unmapped entries clamp to page 0 and are masked via the table entry.
+
+    On real TPUs ``page`` (the pool's second axis) should be a multiple of
+    the sublane count (8 for f32, 16 for bf16) for efficient tiling; the
+    interpreter accepts any size.
+    """
+    B, Sq, Hq, D = q.shape
+    P, page, Hkv, _ = k_pool.shape
+    _, N = page_tables.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    G = Hq // Hkv
+    scale = (D ** -0.5) if scale is None else scale
+
+    q_positions = jnp.broadcast_to(jnp.asarray(q_positions, jnp.int32), (B, Sq))
+    page_tables = jnp.asarray(page_tables, jnp.int32)
+    pos_pool = jnp.asarray(pos_pool, jnp.int32)
+
+    qr, qpos_rows, R, R_pad = _pack_q_rows(q, q_positions, Hkv)
+
+    kernel = functools.partial(
+        _paged_kernel,
+        num_logical_pages=N,
+        causal=causal,
+        sliding_window=sliding_window,
+        logit_softcap=logit_softcap,
+        scale=scale,
+    )
+
+    def phys(b, h, j, tbl):
+        del h
+        return jnp.maximum(tbl[b, j], 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hkv, N),
+        in_specs=[
+            pl.BlockSpec((1, 1, R_pad, D), lambda b, h, j, tbl: (b, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, D),
+                         lambda b, h, j, tbl: (phys(b, h, j, tbl), 0, h, 0)),
+            pl.BlockSpec((1, page, 1, D),
+                         lambda b, h, j, tbl: (phys(b, h, j, tbl), 0, h, 0)),
+            pl.BlockSpec((1, R_pad), lambda b, h, j, tbl: (b, 0)),
+            pl.BlockSpec((1, page),
+                         lambda b, h, j, tbl: (phys(b, h, j, tbl), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, R_pad, D), lambda b, h, j, tbl: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((R_pad, _LANES), jnp.float32),
+            pltpu.VMEM((R_pad, _LANES), jnp.float32),
+            pltpu.VMEM((R_pad, D), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, R_pad, D), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(page_tables, qr, k_pool, v_pool, qpos_rows, pos_pool)
+
     out = out[:, :, :R].reshape(B, Hkv, Sq, G, D).transpose(0, 2, 1, 3, 4)
     return out.reshape(B, Sq, Hq, D)

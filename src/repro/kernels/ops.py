@@ -15,10 +15,14 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels.flash_attention import flash_attention_forward
-from repro.kernels.flash_decode import flash_decode_forward
+from repro.kernels.flash_decode import (
+    flash_decode_forward,
+    paged_flash_decode_forward,
+)
 from repro.kernels.rmsnorm import rmsnorm_forward
 
-__all__ = ["flash_attention", "decode_attention", "rmsnorm", "wkv6"]
+__all__ = ["flash_attention", "decode_attention", "paged_gather_kv",
+           "rmsnorm", "wkv6"]
 
 
 def _same_positions(q_positions, k_positions) -> bool:
@@ -83,13 +87,31 @@ def flash_attention(
         block_q=block_q, block_k=block_k, interpret=interpret)
 
 
+def paged_gather_kv(k_pool: jax.Array, v_pool: jax.Array,
+                    pos_pool: jax.Array, page_tables: jax.Array):
+    """Materialize a paged pool into contiguous per-sequence (B, N*page, ...)
+    K/V + positions via an XLA gather — the portable reference path for
+    paged decode. Unmapped logical pages (table entry -1) gather physical
+    page 0 but their positions are forced to -1, so masking drops them.
+    """
+    tbl = jnp.asarray(page_tables, jnp.int32)  # (B, N)
+    B, N = tbl.shape
+    P, page, Hkv, D = k_pool.shape
+    safe = jnp.maximum(tbl, 0)
+    k = k_pool[safe].reshape(B, N * page, Hkv, D)
+    v = v_pool[safe].reshape(B, N * page, Hkv, D)
+    kpos = jnp.where((tbl >= 0)[:, :, None], pos_pool[safe], -1)
+    return k, v, kpos.reshape(B, N * page)
+
+
 def decode_attention(
     q: jax.Array,  # (B, S', Hq, D)
-    k: jax.Array,  # (B, T, Hkv, D) — KV cache, any physical slot order
+    k: jax.Array,  # (B, T, Hkv, D) cache — or (P, page, Hkv, D) pool (paged)
     v: jax.Array,
     *,
     q_positions,  # (B, S') or (S',) absolute positions of the new tokens
-    k_positions,  # (B, T) or (T,) per-slot absolute positions, -1 = empty
+    k_positions,  # (B, T)/(T,) slot positions — or (P, page) pos pool (paged)
+    page_tables: Optional[jax.Array] = None,  # (B, N) int32, -1 = unmapped
     causal: bool = True,
     sliding_window: Optional[int] = None,
     logit_softcap: Optional[float] = None,
@@ -103,6 +125,11 @@ def decode_attention(
     ``(B, Hkv, G, S', T)`` logits tensor — the decode TPOT hot path streams
     the cache through VMEM once per KV group. Masking reads the cache's
     ``pos`` tensor directly, so sliding-window/ring layouts need no gather.
+
+    With ``page_tables``, ``k``/``v`` are shared physical page *pools* and
+    ``k_positions`` is the per-page position pool: the kernel DMAs exactly
+    the pages named by each sequence's table row (scalar prefetch), so the
+    pool is never gathered in HBM.
     """
     # Decode positions are never inferable (queries continue an absolute
     # position stream; cache slots hold arbitrary ring positions) — a
@@ -110,6 +137,11 @@ def decode_attention(
     if q_positions is None or k_positions is None:
         raise ValueError("decode_attention requires explicit q_positions "
                          "and k_positions (cache pos tensor)")
+    if page_tables is not None:
+        return paged_flash_decode_forward(
+            q, k, v, k_positions, page_tables, q_positions, causal=causal,
+            sliding_window=sliding_window, logit_softcap=logit_softcap,
+            scale=scale, interpret=interpret)
     # flash_decode_forward broadcasts (S',)/(1,S')/(B,S') position shapes.
     return flash_decode_forward(
         q, k, v, q_positions, k_positions, causal=causal,

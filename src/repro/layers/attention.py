@@ -65,6 +65,26 @@ class MultiheadAttention(BaseLayer):
         # (shard_map plumbing for the kernel is future work).
         decode_impl: str = "ref"
         decode_block_k: int = 256
+        # KV cache layout: "dense" (per-slot (B, T, Hkv, D) ring buffer) |
+        # "paged" (shared pool of fixed-size pages + per-sequence page
+        # tables, vLLM-style). Paged allocates KV on demand instead of
+        # slots x max_len up front — the serving subsystem
+        # (repro.serving) packs more concurrent sequences into the same
+        # memory and evicts/restores them page-wise. Config choice, not a
+        # code change (paper §4.2): engines only see opaque state pytrees.
+        kv_cache_layout: str = "dense"
+        # Tokens per physical page. On real TPUs use a multiple of the
+        # sublane count (8 f32 / 16 bf16) for efficient pool tiling.
+        page_size: int = 16
+        # Physical pages in the shared pool (page 0 is reserved as the null
+        # target of unmapped table entries and is never written). None ->
+        # full residency: 1 + batch_size * ceil(max_len / page_size) pages,
+        # which makes generate()-style whole-batch decoding work with the
+        # identity page table that init_states installs when capacity
+        # allows. The serving allocator sets this BELOW full residency and
+        # owns the tables — that undercommit is where the >= 2x concurrency
+        # at equal KV memory comes from.
+        num_pages: Optional[int] = None
         blockwise_chunk_size: int = 512
         blockwise_unroll: bool = False
         # Pallas kernel runs interpreted off-TPU (config, not code: §4.2).
@@ -87,6 +107,13 @@ class MultiheadAttention(BaseLayer):
             cfg.set(head_dim=cfg.input_dim // cfg.num_heads)
         if cfg.num_heads % cfg.num_kv_heads != 0:
             raise ValueError(f"num_heads {cfg.num_heads} % num_kv_heads {cfg.num_kv_heads} != 0")
+        if cfg.kv_cache_layout not in ("dense", "paged"):
+            raise ValueError(f"Unknown kv_cache_layout {cfg.kv_cache_layout!r}")
+        if cfg.kv_cache_layout == "paged" and cfg.sliding_window is not None:
+            # The ring buffer IS the memory bound for sliding-window layers;
+            # paging them would only add indirection.
+            raise ValueError("kv_cache_layout='paged' does not support "
+                             "sliding_window; keep the dense ring layout")
         proj = cfg.proj.clone().set(
             input_dim=cfg.input_dim,
             bias=cfg.qkv_bias,
@@ -158,7 +185,8 @@ class MultiheadAttention(BaseLayer):
                 f"resolves to {spec} on mesh {dict(mesh.shape)}. Use "
                 f"decode_impl='ref' for sequence-sharded caches.")
 
-    def _attend(self, q, k, v, *, q_positions, k_positions, decode=False):
+    def _attend(self, q, k, v, *, q_positions, k_positions, decode=False,
+                page_tables=None):
         cfg = self.config
         kwargs = dict(
             q_positions=q_positions,
@@ -174,10 +202,21 @@ class MultiheadAttention(BaseLayer):
 
                 self._check_flash_decode_cache_unsharded()
                 return kernel_ops.decode_attention(
-                    q, k, v, block_k=cfg.decode_block_k,
+                    q, k, v, page_tables=page_tables,
+                    block_k=cfg.decode_block_k,
                     interpret=cfg.kernel_interpret, **kwargs)
             if cfg.decode_impl != "ref":
                 raise ValueError(f"Unknown decode impl {cfg.decode_impl!r}")
+            if page_tables is not None:
+                # Portable paged path: materialize this batch's pages with an
+                # XLA gather, then run the reference oracle.
+                from repro.kernels import ops as kernel_ops
+
+                k, v, kpos = kernel_ops.paged_gather_kv(
+                    k, v, k_positions, page_tables)
+                kwargs["k_positions"] = kpos
+                return kernel_ref.reference_attention(
+                    q, k.astype(q.dtype), v.astype(q.dtype), **kwargs)
             if cfg.kv_cache_partition is not None:
                 kv_spec = tuple(cfg.kv_cache_partition)
                 # logits (B, Hkv, G, S', T): batch + cache-seq axes from config.
@@ -221,18 +260,63 @@ class MultiheadAttention(BaseLayer):
             return min(max_len, cfg.sliding_window)
         return max_len
 
+    def _paged_geometry(self, batch_size: int, max_len: int):
+        """(page_size, logical pages per sequence, physical pool pages)."""
+        cfg = self.config
+        page = cfg.page_size
+        n_logical = -(-max_len // page)
+        num_pages = cfg.num_pages
+        if num_pages is None:
+            num_pages = 1 + batch_size * n_logical  # + the reserved null page
+        return page, n_logical, num_pages
+
     @no_context
     def state_partition_specs(self, *_):
         """Named-axis shardings for the init_states pytree (used by launchers
         to build explicit in_shardings for serve_step)."""
         cfg = self.config
         kv = tuple(cfg.kv_cache_partition) if cfg.kv_cache_partition else (None,) * 4
+        if cfg.kv_cache_layout == "paged":
+            pool = (None, None, kv[2], kv[3])  # (P, page, Hkv, D)
+            return {"k_pool": pool, "v_pool": pool, "pos_pool": (None, None),
+                    "page_table": (kv[0], None), "index": (kv[0],)}
         return {"k": kv, "v": kv, "pos": (kv[0], kv[1]), "index": (kv[0],)}
 
     def init_states(self, batch_size: int, max_len: int) -> Dict[str, Any]:
         """Empty KV cache. ``pos`` tracks the absolute position in each slot
-        (-1 = invalid), which makes ring-buffer masking trivial."""
+        (-1 = invalid), which makes ring-buffer masking trivial.
+
+        Paged layout: a shared ``(num_pages, page_size, Hkv, D)`` pool, a
+        per-page position pool, and per-sequence page tables. Page 0 is the
+        reserved null page (unmapped table entries clamp to it on reads and
+        are masked; writes through unmapped entries are dropped). When the
+        pool is big enough for full residency the tables start as the
+        identity layout so plain batched generation works out of the box;
+        otherwise they start unmapped (-1) and a serving-side allocator owns
+        them.
+        """
         cfg = self.config
+        if cfg.kv_cache_layout == "paged":
+            page, n_logical, P = self._paged_geometry(batch_size, max_len)
+            pool_shape = (P, page, cfg.num_kv_heads, cfg.head_dim)
+            pool_spec = None
+            if cfg.kv_cache_partition is not None:
+                kv = tuple(cfg.kv_cache_partition)
+                pool_spec = (None, None, kv[2], kv[3])
+            if P >= 1 + batch_size * n_logical:
+                table = 1 + jnp.arange(batch_size * n_logical, dtype=jnp.int32
+                                       ).reshape(batch_size, n_logical)
+            else:
+                table = jnp.full((batch_size, n_logical), -1, jnp.int32)
+            return {
+                "k_pool": self._shard(jnp.zeros(pool_shape, cfg.kv_cache_dtype),
+                                      pool_spec),
+                "v_pool": self._shard(jnp.zeros(pool_shape, cfg.kv_cache_dtype),
+                                      pool_spec),
+                "pos_pool": jnp.full((P, page), -1, jnp.int32),
+                "page_table": table,
+                "index": jnp.zeros((batch_size,), jnp.int32),
+            }
         T = self._cache_len(max_len)
         shape = (batch_size, T, cfg.num_kv_heads, cfg.head_dim)
         cache = {
@@ -246,6 +330,35 @@ class MultiheadAttention(BaseLayer):
         cache["k"] = self._shard(cache["k"], cfg.kv_cache_partition)
         cache["v"] = self._shard(cache["v"], cfg.kv_cache_partition)
         return cache
+
+    def _paged_scatter(self, state: Dict[str, Any], k: jax.Array,
+                       v: jax.Array, positions: jax.Array,
+                       valid: jax.Array) -> Dict[str, Any]:
+        """Write tokens at absolute ``positions`` (B, S) into the page pool
+        through each sequence's page table row. Tokens that are invalid
+        (bucket padding) or whose logical page is unmapped scatter out of
+        bounds and are dropped — unmapped writes can never corrupt the null
+        page or another sequence's pages.
+        """
+        cfg = self.config
+        table = state["page_table"]  # (B, N)
+        P, page = state["pos_pool"].shape
+        # Positions beyond table capacity (no ring in the paged layout) are
+        # dropped, like bucket padding.
+        valid = valid & (positions >= 0) & (positions < table.shape[1] * page)
+        logical = jnp.clip(positions // page, 0, table.shape[1] - 1)
+        phys = jnp.take_along_axis(table, logical, axis=1)  # (B, S)
+        flat = phys * page + positions % page
+        oob = P * page
+        flat = jnp.where(valid & (phys > 0), flat, oob)  # page 0 = null
+        H, D = cfg.num_kv_heads, cfg.head_dim
+        new_k = state["k_pool"].reshape(oob, H, D).at[flat].set(
+            k.astype(cfg.kv_cache_dtype)).reshape(P, page, H, D)
+        new_v = state["v_pool"].reshape(oob, H, D).at[flat].set(
+            v.astype(cfg.kv_cache_dtype)).reshape(P, page, H, D)
+        new_pos = state["pos_pool"].reshape(oob).at[flat].set(
+            positions.astype(jnp.int32)).reshape(P, page)
+        return {"k_pool": new_k, "v_pool": new_v, "pos_pool": new_pos}
 
     def prefill(self, state: Dict[str, Any], x: jax.Array,
                 positions: Optional[jax.Array] = None,
@@ -270,6 +383,12 @@ class MultiheadAttention(BaseLayer):
         y = self.o_proj(out)
 
         length = jnp.asarray(S if length is None else length, jnp.int32)
+        if cfg.kv_cache_layout == "paged":
+            pos_b = jnp.broadcast_to(positions, (B, S))
+            pools = self._paged_scatter(state, k, v, pos_b,
+                                        valid=pos_b < length)
+            return {**pools, "page_table": state["page_table"],
+                    "index": jnp.broadcast_to(length, (B,))}, y
         T = state["k"].shape[1]
         if S > T:
             # Ring layout: keep the last T *valid* tokens.
@@ -296,14 +415,30 @@ class MultiheadAttention(BaseLayer):
 
     def extend_step(self, state: Dict[str, Any], x_step: jax.Array
                     ) -> Tuple[Dict[str, Any], jax.Array]:
-        """Decode S' >= 1 new tokens against the cache."""
+        """Decode S' >= 1 new tokens against the cache.
+
+        S' > 1 with causal masking among the new tokens doubles as the
+        *chunked-prefill* program: the serving scheduler feeds prompt chunks
+        through this path so a long prompt never stalls in-flight decodes.
+        """
         cfg = self.config
         B, S_new, _ = x_step.shape
-        T = state["k"].shape[1]
         index = state["index"]  # (B,)
         positions = index[:, None] + jnp.arange(S_new)[None, :]  # (B, S')
         q, k, v = self._project_qkv(x_step, positions)
 
+        if cfg.kv_cache_layout == "paged":
+            pools = self._paged_scatter(
+                state, k, v, positions, valid=jnp.ones_like(positions, bool))
+            out = self._attend(
+                q, pools["k_pool"], pools["v_pool"],
+                q_positions=positions, k_positions=pools["pos_pool"],
+                page_tables=state["page_table"], decode=True)
+            out = out.reshape(B, S_new, cfg.num_heads * cfg.head_dim)
+            return {**pools, "page_table": state["page_table"],
+                    "index": index + S_new}, self.o_proj(out)
+
+        T = state["k"].shape[1]
         slots = positions % T  # (B, S')
         rows = jnp.arange(B)[:, None]
         new_k = state["k"].at[rows, slots].set(k.astype(cfg.kv_cache_dtype))

@@ -1,0 +1,31 @@
+"""Serving subsystem: paged KV-cache allocation, iteration-level scheduling,
+and a streaming gateway — layered on :class:`repro.inference.InferenceEngine`.
+
+The paper's modularity thesis (§4.2, §6) applied to serving: the KV cache
+stays an encapsulated component of each token mixer (``kv_cache_layout``
+is a *config knob* on attention), and this package adds the resource
+management above it — the way Orca-style iteration-level scheduling and
+vLLM-style paging decouple serving throughput from model code.
+
+  * :mod:`repro.serving.paged_cache` — fixed-size page pool allocator and
+    host-side manipulation of paged cache pytrees (page tables, eviction
+    to host memory, restore by re-splicing pages).
+  * :mod:`repro.serving.scheduler` — the iteration-level loop: priority
+    admission, chunked prefill interleaved with decode, preemption when
+    pages run out.
+  * :mod:`repro.serving.gateway` — non-blocking ``submit()/stream()`` API
+    with per-request sampling params, token callbacks, and telemetry.
+"""
+
+from repro.serving.gateway import SamplingParams, ServingGateway
+from repro.serving.paged_cache import BlockAllocator, PagedCacheManager
+from repro.serving.scheduler import ServeRequest, Scheduler
+
+__all__ = [
+    "BlockAllocator",
+    "PagedCacheManager",
+    "SamplingParams",
+    "Scheduler",
+    "ServeRequest",
+    "ServingGateway",
+]

@@ -1,0 +1,150 @@
+"""Streaming serving gateway: non-blocking submit/stream over the scheduler.
+
+The front door of the serving subsystem: callers ``submit()`` prompts with
+per-request :class:`SamplingParams` and a priority, then either iterate
+``stream(request_id)`` for tokens as they are generated, register an
+``on_token`` callback, or ``drain()`` to completion. The gateway is
+single-threaded and cooperative — ``stream()``/``drain()`` advance the
+scheduler's iteration loop themselves, so there is no background thread to
+synchronize with (and no GIL fight with the JAX dispatch thread); a caller
+that wants push-style delivery gets it via callbacks fired on every
+generated token.
+
+Telemetry (:meth:`metrics`) reports queue depth, KV page utilization,
+completed/preempted counts, output tokens/s, and p50/p99 TTFT and TPOT —
+the Table-4 metrics at serving granularity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+import numpy as np
+
+from repro.inference.engine import GenerationResult, InferenceEngine
+from repro.serving.scheduler import Scheduler, ServeRequest
+
+__all__ = ["SamplingParams", "ServingGateway"]
+
+
+@dataclasses.dataclass
+class SamplingParams:
+    """Per-request decode controls, threaded as per-slot arrays into the
+    fused decode step (temperature <= 0 = exact greedy; top_k <= 0 = no
+    top-k filtering)."""
+
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    top_k: int = 0
+
+
+class ServingGateway:
+    """Non-blocking request gateway over a loaded :class:`InferenceEngine`."""
+
+    def __init__(self, engine: InferenceEngine, *, prefill_chunk: int = 16,
+                 seed: int = 0):
+        self.scheduler = Scheduler(engine, prefill_chunk=prefill_chunk,
+                                   seed=seed)
+        self._next_id = 0
+        self._queues: Dict[int, deque] = {}
+        self._t0 = time.perf_counter()
+        self._tokens_out = 0
+
+    # ------------------------------------------------------------ lifecycle
+
+    def submit(self, prompt: np.ndarray, *,
+               sampling: Optional[SamplingParams] = None, priority: int = 0,
+               on_token: Optional[Callable[[int, int], None]] = None) -> int:
+        """Enqueue a prompt; returns immediately with the request id. No
+        device work happens until :meth:`step`/:meth:`stream`/:meth:`drain`
+        advances the scheduler."""
+        sampling = sampling or SamplingParams()
+        rid = self._next_id
+        self._next_id += 1
+        q: deque = deque()
+        self._queues[rid] = q
+
+        def hook(req_id: int, tok: int):
+            q.append(tok)
+            self._tokens_out += 1
+            if on_token is not None:
+                on_token(req_id, tok)
+
+        self.scheduler.submit(ServeRequest(
+            request_id=rid, prompt=np.asarray(prompt, np.int32),
+            max_new_tokens=sampling.max_new_tokens,
+            temperature=sampling.temperature, top_k=sampling.top_k,
+            priority=priority, arrival_time=time.perf_counter(),
+            on_token=hook))
+        return rid
+
+    def step(self) -> bool:
+        """One scheduler iteration; returns whether work remains."""
+        return self.scheduler.step()
+
+    def stream(self, request_id: int) -> Iterator[int]:
+        """Yield the request's tokens as they are generated, driving the
+        scheduler while the request is still in flight. Concurrent requests
+        make progress on the same iterations — streaming one request never
+        starves the rest."""
+        q = self._queues[request_id]
+        while True:
+            if q:
+                yield q.popleft()
+            elif self.scheduler.is_done(request_id):
+                return
+            elif not self.scheduler.step():
+                while q:
+                    yield q.popleft()
+                return
+
+    def drain(self) -> Dict[int, GenerationResult]:
+        """Run the scheduler to idle; returns results for every request
+        completed so far, keyed by request id."""
+        while self.scheduler.step():
+            pass
+        return {rid: self.scheduler.result(rid)
+                for rid in list(self._queues)
+                if self.scheduler.is_done(rid)}
+
+    def result(self, request_id: int) -> Optional[GenerationResult]:
+        return self.scheduler.result(request_id)
+
+    # ------------------------------------------------------------ telemetry
+
+    def metrics(self) -> Dict[str, Any]:
+        """Serving telemetry: queue/pool state plus latency percentiles over
+        completed requests."""
+        sched = self.scheduler
+        ttfts: List[float] = []
+        tpots: List[float] = []
+        for rid in list(self._queues):
+            res = sched.result(rid)
+            if res is not None:
+                ttfts.append(res.ttft_s)
+                tpots.append(res.tpot_s)
+        wall = max(time.perf_counter() - self._t0, 1e-9)
+
+        def pct(xs, p):
+            return float(np.percentile(xs, p)) if xs else 0.0
+
+        return {
+            "queue_depth": sched.queue_depth,
+            "running": sum(s is not None for s in sched._slot_seq),
+            "block_utilization": sched.block_utilization,
+            "completed": sched.stats["completed"],
+            "preemptions": sched.stats["preemptions"],
+            "restores": sched.stats["restores"],
+            "prefill_chunks": sched.stats["prefill_chunks"],
+            "decode_steps": sched.stats["decode_steps"],
+            "max_concurrent": sched.stats["max_concurrent"],
+            "tokens_out": self._tokens_out,
+            "tokens_per_s": self._tokens_out / wall,
+            "ttft_p50_s": pct(ttfts, 50),
+            "ttft_p99_s": pct(ttfts, 99),
+            "tpot_p50_s": pct(tpots, 50),
+            "tpot_p99_s": pct(tpots, 99),
+        }

@@ -1,0 +1,244 @@
+"""Paged KV-cache management: page allocator + host-side cache surgery.
+
+KV memory is a shared pool of fixed-size pages per attention layer (see
+``MultiheadAttention.Config.kv_cache_layout = "paged"``); sequences hold
+*page tables* instead of dense ``slots x max_len`` rows. This module owns
+the host-side resource management:
+
+  * :class:`BlockAllocator` — a free-list over physical page ids with
+    double-free/leak guards. One allocator serves every layer: each layer
+    has its own pool of identical geometry, so a single page id names the
+    same page in all of them.
+  * :class:`PagedCacheManager` — structure-aware surgery on the engine's
+    (otherwise opaque) cache pytree: writing page-table rows, clearing
+    recycled pages, extracting a sequence's pages + per-slot rows to host
+    memory (eviction), and re-splicing them into freshly allocated pages
+    (restore) — no re-prefill.
+
+Leaf-name contract (how an opaque pytree becomes pageable): attention's
+paged cache exposes ``k_pool``/``v_pool`` (page axis at ``ndim-4``),
+``pos_pool`` (page axis at ``ndim-2``) and ``page_table`` (batch axis at
+``ndim-2``); any leading axes (e.g. ``Repeat``'s stacked-layer axis) are
+carried transparently. Everything else (dense KV rows, Mamba/RWKV
+recurrent state) is handled purely through its batch axis — recurrent
+mixers keep their O(1) state and bypass paging entirely.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["BlockAllocator", "PagedCacheManager"]
+
+# Page axis of a pool leaf, keyed by leaf name, expressed as trailing rank:
+# k_pool/v_pool are (..., P, page, Hkv, D) -> page axis at ndim-4;
+# pos_pool is (..., P, page) -> ndim-2.
+_POOL_PAGE_AXIS = {"k_pool": -4, "v_pool": -4, "pos_pool": -2}
+NULL_PAGE = 0  # reserved: unmapped table entries clamp here on reads
+
+
+class BlockAllocator:
+    """Free-list allocator over physical KV pages.
+
+    Page 0 (the null page) is reserved and never handed out. ``alloc``
+    returns ``None`` (rather than raising) when the pool cannot satisfy the
+    request — the scheduler turns that into preemption, not failure.
+    """
+
+    def __init__(self, num_pages: int):
+        if num_pages < 2:
+            raise ValueError(f"need >= 2 pages (1 usable), got {num_pages}")
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))  # pop() -> 1
+        self._in_use: set = set()
+        self.num_pages = num_pages
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_in_use(self) -> int:
+        return len(self._in_use)
+
+    @property
+    def capacity(self) -> int:
+        """Allocatable pages (the null page is not)."""
+        return self.num_pages - 1
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """n fresh page ids, or None if fewer than n are free."""
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._in_use.update(pages)
+        return pages
+
+    def free(self, pages: List[int]):
+        """Return pages to the free list. Raises on double-free or on a page
+        this allocator never handed out — the invariant the churn test
+        leans on."""
+        for p in pages:
+            if p not in self._in_use:
+                raise ValueError(f"free of unallocated page {p}")
+            self._in_use.remove(p)
+            self._free.append(p)
+
+
+@dataclasses.dataclass
+class _LeafInfo:
+    name: str  # last dict key on the leaf's path
+    batch_axis: int  # -1 = shared leaf (no per-slot rows)
+    page_axis: int  # -1 = not a pool leaf
+
+
+class PagedCacheManager:
+    """Host-side surgery on a (possibly paged) engine cache pytree.
+
+    Built once from a template cache and the engine's per-leaf batch-axis
+    map; every operation takes and returns a full cache pytree (leaves are
+    device arrays; ops dispatch eagerly — these are rare control-plane
+    events, not the decode hot path).
+    """
+
+    def __init__(self, template_cache: Any, batch_axes: Any):
+        leaves, self._treedef = jax.tree_util.tree_flatten(template_cache)
+        axes_leaves = jax.tree_util.tree_flatten(batch_axes)[0]
+        paths = jax.tree_util.tree_flatten_with_path(template_cache)[0]
+        self._info: List[_LeafInfo] = []
+        self.page_size = self.num_pages = self.n_logical = None
+        for (path, leaf), ax in zip(paths, axes_leaves):
+            name = ""
+            for entry in reversed(path):
+                key = getattr(entry, "key", None)
+                if isinstance(key, str):
+                    name = key
+                    break
+            page_axis = -1
+            if name in _POOL_PAGE_AXIS:
+                page_axis = leaf.ndim + _POOL_PAGE_AXIS[name]
+                if name == "pos_pool":
+                    self.num_pages, self.page_size = leaf.shape[-2:]
+            if name == "page_table":
+                self.n_logical = leaf.shape[-1]
+            self._info.append(_LeafInfo(name, int(ax), page_axis))
+
+    @property
+    def is_paged(self) -> bool:
+        return self.num_pages is not None
+
+    # ------------------------------------------------------------- helpers
+
+    def _map(self, cache, fn):
+        """fn(leaf, info) -> leaf over the flat cache."""
+        leaves = jax.tree_util.tree_flatten(cache)[0]
+        out = [fn(leaf, info) for leaf, info in zip(leaves, self._info)]
+        return jax.tree_util.tree_unflatten(self._treedef, out)
+
+    @staticmethod
+    def _set_rows(leaf, axis, idx, vals):
+        moved = jnp.moveaxis(leaf, axis, 0)
+        return jnp.moveaxis(moved.at[idx].set(vals), 0, axis)
+
+    # -------------------------------------------------------- page tables
+
+    def write_table_row(self, cache, slot: int, row: np.ndarray):
+        """Install a sequence's page table row (same ids in every layer)."""
+        row = jnp.asarray(row, jnp.int32)
+
+        def fn(leaf, info):
+            if info.name != "page_table":
+                return leaf
+            return self._set_rows(leaf, leaf.ndim - 2, slot, row)
+
+        return self._map(cache, fn)
+
+    def clear_tables(self, cache):
+        """Unmap every sequence (allocator-managed mode: init_states may
+        have installed full-residency identity tables)."""
+        def fn(leaf, info):
+            if info.name != "page_table":
+                return leaf
+            return jnp.full_like(leaf, -1)
+
+        return self._map(cache, fn)
+
+    def reset_pages(self, cache, pages: List[int]):
+        """Invalidate recycled pages' positions so a later partial fill
+        can't expose a previous tenant's tokens to the mask."""
+        if not pages:
+            return cache
+        idx = jnp.asarray(pages, jnp.int32)
+
+        def fn(leaf, info):
+            if info.name != "pos_pool":
+                return leaf
+            return self._set_rows(leaf, info.page_axis, idx, -1)
+
+        return self._map(cache, fn)
+
+    # ---------------------------------------------------- evict / restore
+
+    def extract_slot(self, cache, slot: int) -> List[Optional[np.ndarray]]:
+        """Host copy of one sequence's per-slot rows (recurrent state, dense
+        KV rows, index — everything with a batch axis except the page
+        table, which the allocator rebuilds on restore)."""
+        leaves = jax.tree_util.tree_flatten(cache)[0]
+        out = []
+        for leaf, info in zip(leaves, self._info):
+            if info.batch_axis < 0 or info.name == "page_table":
+                out.append(None)
+            else:
+                out.append(np.asarray(jnp.take(leaf, slot,
+                                               axis=info.batch_axis)))
+        return out
+
+    def splice_slot(self, cache, slot: int, rows: List[Optional[np.ndarray]]):
+        def fn_pair():
+            leaves = jax.tree_util.tree_flatten(cache)[0]
+            out = []
+            for leaf, info, row in zip(leaves, self._info, rows):
+                if row is None:
+                    out.append(leaf)
+                else:
+                    out.append(self._set_rows(leaf, info.batch_axis, slot,
+                                              jnp.asarray(row)))
+            return out
+
+        return jax.tree_util.tree_unflatten(self._treedef, fn_pair())
+
+    def extract_pages(self, cache, pages: List[int]) -> List[Optional[np.ndarray]]:
+        """Host copy of the given physical pages from every pool leaf —
+        the KV payload of an evicted sequence."""
+        idx = jnp.asarray(pages, jnp.int32)
+        leaves = jax.tree_util.tree_flatten(cache)[0]
+        out = []
+        for leaf, info in zip(leaves, self._info):
+            if info.page_axis < 0:
+                out.append(None)
+            else:
+                out.append(np.asarray(jnp.take(leaf, idx, axis=info.page_axis)))
+        return out
+
+    def insert_pages(self, cache, pages: List[int],
+                     payload: List[Optional[np.ndarray]]):
+        """Write evicted page contents into freshly allocated pages —
+        restore is a re-splice, not a re-prefill."""
+        idx = jnp.asarray(pages, jnp.int32)
+        leaves = jax.tree_util.tree_flatten(cache)[0]
+        out = []
+        for leaf, info, content in zip(leaves, self._info, payload):
+            if content is None:
+                out.append(leaf)
+            else:
+                moved = jnp.moveaxis(leaf, info.page_axis, 0)
+                vals = jnp.moveaxis(jnp.asarray(content), info.page_axis, 0)
+                out.append(jnp.moveaxis(moved.at[idx].set(vals), 0,
+                                        info.page_axis))
+        return jax.tree_util.tree_unflatten(self._treedef, out)

@@ -1,0 +1,528 @@
+"""Iteration-level serving scheduler: chunked prefill, paging, preemption.
+
+Orca-style scheduling (paper §6) on top of ``InferenceEngine``: every
+iteration interleaves at most one *prefill chunk* with one fused decode
+step over all running slots, so a long prompt never stalls in-flight
+decodes for more than the configured chunk budget.
+
+Key mechanics:
+
+  * **Chunked prefill = ``extend_step``.** A prompt is fed through the
+    model's ``extend_step`` in chunks (S' > 1 decode steps mask causally
+    among themselves), writing straight into the slot's cache — the same
+    program decode uses, so no separate prefill graph. Chunk lengths are
+    the greedy power-of-two decomposition of the prompt (each <= the chunk
+    budget), which bounds compiled chunk shapes to O(log budget).
+  * **Slot-view splicing.** A chunk runs on a B=1 *view* of the batch
+    cache: per-slot leaves are sliced at the slot, shared leaves (the page
+    pools) pass through whole; after the chunk, per-slot rows are spliced
+    back and updated pools replace the originals. ``slot`` is a traced
+    scalar — one compile per chunk length, not per slot.
+  * **Paging + preemption.** With ``kv_cache_layout="paged"`` models, KV
+    pages are allocated on demand (admission, per prefill chunk, and at
+    page boundaries during decode). When the pool runs dry the
+    lowest-priority sequence is *evicted to host memory* (its pages and
+    per-slot rows — not its tokens) and later *restored by re-splicing*
+    into freshly allocated pages: no re-prefill, the way SageMaker-MP
+    argues resource management should live in the framework, not the model.
+  * **Per-slot sampling.** The fused decode step threads per-slot
+    temperature/top-k arrays and a PRNG key, so mixed greedy/sampled
+    requests batch together (greedy rows are exact argmax).
+
+The scheduler is layout-agnostic: dense-cache models (and recurrent
+mixers, whose O(1) state bypasses paging entirely) run through the same
+loop with page logic inert.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.module import functional
+from repro.inference.engine import GenerationResult, InferenceEngine
+from repro.serving.paged_cache import BlockAllocator, PagedCacheManager
+
+__all__ = ["ServeRequest", "Scheduler"]
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """A serving request. ``priority``: higher preempts lower; FCFS within a
+    priority level. ``on_token`` fires on the scheduler thread for every
+    generated token (the gateway's streaming hook)."""
+
+    request_id: int
+    prompt: np.ndarray  # (prompt_len,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0  # 0 = greedy
+    top_k: int = 0  # 0 = no top-k filtering
+    priority: int = 0
+    arrival_time: float = 0.0
+    on_token: Optional[Callable[[int, int], None]] = None
+
+
+# Sequence lifecycle states.
+_WAITING, _PREFILL, _RUNNING, _PREEMPTED, _DONE = range(5)
+
+
+@dataclasses.dataclass
+class _Seq:
+    req: ServeRequest
+    state: int = _WAITING
+    slot: int = -1
+    pages: List[int] = dataclasses.field(default_factory=list)
+    table_row: Optional[np.ndarray] = None  # host copy of the page-table row
+    prefill_done: int = 0  # prompt tokens whose KV is in the cache
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    # Eviction payload: per-slot rows + page contents, on host.
+    evicted_rows: Optional[List[Optional[np.ndarray]]] = None
+    evicted_pages: Optional[List[Optional[np.ndarray]]] = None
+    n_preempt: int = 0
+    t_submit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+
+    @property
+    def ctx_len(self) -> int:
+        """Tokens whose KV currently lives in the cache: the prefilled
+        prompt plus every generated token already fed back (the latest
+        sampled token rides in the host loop until the next decode)."""
+        return self.prefill_done + max(len(self.tokens) - 1, 0)
+
+    def sort_key(self):
+        return (-self.req.priority, self.req.arrival_time, self.req.request_id)
+
+
+class Scheduler:
+    """Iteration-level scheduler over a loaded :class:`InferenceEngine`.
+
+    ``prefill_chunk`` (a power of two) bounds how many prompt tokens one
+    iteration may prefill — the per-iteration decode stall budget.
+    """
+
+    def __init__(self, engine: InferenceEngine, *, prefill_chunk: int = 16,
+                 seed: int = 0):
+        assert engine._params is not None, "engine.load(params) first"
+        if prefill_chunk < 1 or prefill_chunk & (prefill_chunk - 1):
+            raise ValueError(f"prefill_chunk must be a power of two, "
+                             f"got {prefill_chunk}")
+        self.engine = engine
+        self.prefill_chunk = prefill_chunk
+        self.slots = engine.config.slots
+        self._key = jax.random.PRNGKey(seed)
+
+        if engine.uses_paged_cache():
+            from repro.core.config import visit_config
+
+            missing = []
+
+            def check(path, c):
+                if (getattr(c, "kv_cache_layout", None) == "paged"
+                        and c.num_pages is None):
+                    missing.append(path)
+
+            visit_config(engine.config.model, check)
+            if missing:
+                raise ValueError(
+                    "paged models must set MultiheadAttention.Config."
+                    "num_pages explicitly for serving (pool geometry must "
+                    f"not depend on batch size): {missing[:3]}")
+        self._cache = engine.init_cache(self.slots)
+        self._axes = engine.batch_axes()
+        self.manager = PagedCacheManager(self._cache, self._axes)
+        self.allocator: Optional[BlockAllocator] = None
+        if self.manager.is_paged:
+            self.allocator = BlockAllocator(self.manager.num_pages)
+            # A sequence is bounded by BOTH the pool and its page-table
+            # width (n_logical rows = ceil(max_len / page)): a pool larger
+            # than one table row must not let a sequence index past it.
+            self.capacity_tokens = min(self.allocator.capacity,
+                                       self.manager.n_logical
+                                       ) * self.manager.page_size
+            # init_states may have installed full-residency identity tables;
+            # in serving the allocator owns every mapping.
+            self._cache = self.manager.clear_tables(self._cache)
+        else:
+            self.capacity_tokens = engine.config.max_len
+        # Pristine per-slot rows (all slots identical at init) — admission
+        # resets a recycled slot from these.
+        self._zero_rows = self.manager.extract_slot(self._cache, 0)
+
+        self._slot_seq: List[Optional[_Seq]] = [None] * self.slots
+        self._waiting: List[_Seq] = []
+        self._preempted: List[_Seq] = []
+        self._done: Dict[int, _Seq] = {}
+        self.stats: Dict[str, Any] = {
+            "admitted": 0, "completed": 0, "preemptions": 0, "restores": 0,
+            "decode_steps": 0, "prefill_chunks": 0, "max_concurrent": 0,
+            "truncated": 0,
+        }
+
+    # ------------------------------------------------------------- plumbing
+
+    def _chunk_fn_builder(self):
+        """(params, cache, ids (1, C), slot) -> (cache, last_logits (V,)).
+
+        One compiled program per chunk length C; ``slot`` is traced.
+        """
+        model = self.engine.model
+        axes = self._axes
+
+        def chunk(params, cache, ids, slot):
+            def take(leaf, ax):
+                if ax < 0:
+                    return leaf
+                return jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=ax)
+
+            sub = jax.tree.map(take, cache, axes)
+            (sub, logits), _ = functional(
+                model, state=params,
+                inputs={"state": sub, "ids_step": ids}, method="extend_step")
+
+            def put(bc, c, ax):
+                if ax < 0:
+                    return c  # shared leaf (page pool): chunk updated it
+                return jax.lax.dynamic_update_slice_in_dim(
+                    bc, c.astype(bc.dtype), slot, axis=ax)
+
+            cache = jax.tree.map(put, cache, sub, axes)
+            return cache, logits[0, -1]
+
+        return chunk
+
+    def _chunk_fn(self, c: int):
+        return self.engine._jit(("serve_chunk", c), self._chunk_fn_builder,
+                                donate_argnums=(1,))
+
+    def _decode_fn(self):
+        return self.engine._jit(
+            "serve_decode_sampling",
+            lambda: self.engine._serve_decode_fn(sampling=True),
+            donate_argnums=(1,))
+
+    def _sample_first(self, seq: _Seq, logits: jax.Array) -> int:
+        """Sample the first token from the final prefill chunk's logits with
+        the same per-slot rule the fused decode step applies."""
+        from repro.inference.engine import sample_one
+
+        tok, self._key = sample_one(logits, self._key, seq.req.temperature,
+                                    seq.req.top_k)
+        return tok
+
+    # ------------------------------------------------------ page accounting
+
+    def _pages_needed(self, upto_tokens: int, have: int) -> int:
+        return max(-(-upto_tokens // self.manager.page_size) - have, 0)
+
+    def _try_alloc(self, seq: _Seq, upto_tokens: int) -> bool:
+        """Ensure ``seq`` has pages mapped for the first ``upto_tokens``
+        token positions, evicting lower-priority sequences if the pool runs
+        dry. False = could not (seq must wait or be preempted itself)."""
+        if self.allocator is None:
+            return True
+        n = self._pages_needed(upto_tokens, len(seq.pages))
+        if n == 0:
+            return True
+        while self.allocator.num_free < n:
+            victim = self._pick_victim(exclude=seq)
+            if victim is None:
+                return False
+            self._evict(victim)
+        new = self.allocator.alloc(n)
+        assert new is not None
+        start = len(seq.pages)
+        seq.pages.extend(new)
+        for j, p in enumerate(new):
+            seq.table_row[start + j] = p
+        self._cache = self.manager.write_table_row(
+            self._cache, seq.slot, seq.table_row)
+        return True
+
+    def _pick_victim(self, exclude: _Seq) -> Optional[_Seq]:
+        """Lowest-priority on-device sequence strictly below ``exclude``
+        (FCFS-stable: among equals the latest arrival goes first)."""
+        candidates = [s for s in self._slot_seq
+                      if s is not None and s is not exclude and s.pages]
+        if not candidates:
+            return None
+        victim = max(candidates, key=lambda s: s.sort_key())
+        if victim.sort_key() <= exclude.sort_key():
+            return None  # nobody outranked by the requester
+        return victim
+
+    # ------------------------------------------------------- state changes
+
+    def _admit(self, seq: _Seq):
+        slot = self._slot_seq.index(None)
+        seq.slot = slot
+        seq.state = _PREFILL
+        seq.prefill_done = 0
+        if self.manager.is_paged:
+            seq.table_row = np.full(self.manager.n_logical, -1, np.int64)
+        # Recycled slot: restore pristine rows (zero recurrent state, empty
+        # dense KV rows, index 0) and unmap its page-table row.
+        self._cache = self.manager.splice_slot(self._cache, slot,
+                                               self._zero_rows)
+        if self.manager.is_paged:
+            self._cache = self.manager.write_table_row(self._cache, slot,
+                                                       seq.table_row)
+        self._slot_seq[slot] = seq
+        self.stats["admitted"] += 1
+        # Device-resident concurrency (preempted sequences don't count).
+        concurrent = sum(s is not None for s in self._slot_seq)
+        self.stats["max_concurrent"] = max(self.stats["max_concurrent"],
+                                           concurrent)
+
+    def _evict(self, seq: _Seq):
+        """Preempt: page contents + per-slot rows move to host, pages and
+        the slot free up. Tokens stay exactly as generated so far."""
+        seq.evicted_rows = self.manager.extract_slot(self._cache, seq.slot)
+        if seq.pages:
+            seq.evicted_pages = self.manager.extract_pages(self._cache,
+                                                           seq.pages)
+            self._cache = self.manager.reset_pages(self._cache, seq.pages)
+            self._cache = self.manager.write_table_row(
+                self._cache, seq.slot,
+                np.full(self.manager.n_logical, -1, np.int64))
+            self.allocator.free(seq.pages)
+        self._slot_seq[seq.slot] = None
+        seq.slot = -1
+        seq.state = _PREEMPTED
+        seq.n_preempt += 1
+        self.stats["preemptions"] += 1
+        self._preempted.append(seq)
+
+    def _restore(self, seq: _Seq) -> bool:
+        """Undo an eviction into a free slot: alloc fresh pages, re-splice
+        the saved page contents and slot rows, rebuild the table row."""
+        n_pages = len(seq.pages)
+        new_pages: List[int] = []
+        if n_pages:
+            got = self.allocator.alloc(n_pages)
+            if got is None:
+                return False
+            new_pages = got
+        slot = self._slot_seq.index(None)
+        seq.slot = slot
+        self._cache = self.manager.splice_slot(self._cache, slot,
+                                               seq.evicted_rows)
+        if self.manager.is_paged:
+            seq.table_row = np.full(self.manager.n_logical, -1, np.int64)
+            for j, p in enumerate(new_pages):
+                seq.table_row[j] = p
+            if new_pages:
+                self._cache = self.manager.insert_pages(
+                    self._cache, new_pages, seq.evicted_pages)
+            self._cache = self.manager.write_table_row(self._cache, slot,
+                                                       seq.table_row)
+        seq.pages = new_pages
+        seq.evicted_rows = seq.evicted_pages = None
+        seq.state = _PREFILL if seq.prefill_done < len(seq.req.prompt) \
+            else _RUNNING
+        self._slot_seq[slot] = seq
+        self.stats["restores"] += 1
+        return True
+
+    def _finish(self, seq: _Seq, *, truncated: bool = False):
+        if seq.pages:
+            self._cache = self.manager.reset_pages(self._cache, seq.pages)
+            self._cache = self.manager.write_table_row(
+                self._cache, seq.slot,
+                np.full(self.manager.n_logical, -1, np.int64))
+            self.allocator.free(seq.pages)
+            seq.pages = []
+        if seq.slot >= 0:
+            self._slot_seq[seq.slot] = None
+            seq.slot = -1
+        seq.state = _DONE
+        seq.t_done = time.perf_counter()
+        self._done[seq.req.request_id] = seq
+        self.stats["completed"] += 1
+        if truncated:
+            self.stats["truncated"] += 1
+
+    def _emit(self, seq: _Seq, tok: int):
+        if not seq.tokens:
+            seq.t_first = time.perf_counter()
+        seq.tokens.append(tok)
+        if seq.req.on_token is not None:
+            seq.req.on_token(seq.req.request_id, tok)
+
+    # ------------------------------------------------------------ main loop
+
+    def submit(self, req: ServeRequest):
+        prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        if len(prompt) == 0:
+            # A zero-length prompt has no logits to sample the first token
+            # from; fail loudly instead of decoding from padding.
+            raise ValueError(f"request {req.request_id}: empty prompt")
+        if self.manager.is_paged and len(prompt) > self.capacity_tokens:
+            raise ValueError(
+                f"prompt of {len(prompt)} tokens exceeds paged KV capacity "
+                f"{self.capacity_tokens} (num_pages x page_size; no ring "
+                f"fallback in the paged layout)")
+        seq = _Seq(req=dataclasses.replace(req, prompt=prompt))
+        seq.t_submit = time.perf_counter()
+        self._waiting.append(seq)
+        self._waiting.sort(key=_Seq.sort_key)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self._waiting or self._preempted
+                    or any(s is not None for s in self._slot_seq))
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._waiting) + len(self._preempted)
+
+    @property
+    def block_utilization(self) -> float:
+        if self.allocator is None:
+            return float("nan")
+        return self.allocator.num_in_use / max(self.allocator.capacity, 1)
+
+    def _fill_slots(self):
+        """Restore preempted and admit waiting sequences, best priority
+        first, while slots (and head-of-line pages) allow."""
+        while None in self._slot_seq:
+            cand = []
+            if self._preempted:
+                cand.append(min(self._preempted, key=_Seq.sort_key))
+            if self._waiting:
+                cand.append(self._waiting[0])
+            if not cand:
+                return
+            seq = min(cand, key=_Seq.sort_key)
+            if seq.state == _PREEMPTED:
+                if not self._restore(seq):
+                    return  # head-of-line waits for pages
+                self._preempted.remove(seq)
+            else:
+                self._admit(seq)
+                self._waiting.pop(0)
+
+    def _prefill_one(self):
+        """One chunk of prefill for the best-priority prefilling sequence —
+        at most ``prefill_chunk`` tokens per iteration, so co-resident
+        decodes stall by one bounded chunk, never a whole prompt."""
+        cands = [s for s in self._slot_seq
+                 if s is not None and s.state == _PREFILL]
+        if not cands:
+            return
+        seq = min(cands, key=_Seq.sort_key)
+        prompt = seq.req.prompt
+        remaining = len(prompt) - seq.prefill_done
+        c = self.prefill_chunk
+        while c > remaining:  # greedy power-of-two decomposition
+            c //= 2
+        if not self._try_alloc(seq, seq.prefill_done + c):
+            return  # pool dry and nobody to evict: retry next iteration
+        ids = jnp.asarray(prompt[seq.prefill_done:seq.prefill_done + c]
+                          )[None, :]
+        self._cache, logits = self._chunk_fn(c)(
+            self.engine._params, self._cache, ids,
+            jnp.asarray(seq.slot, jnp.int32))
+        seq.prefill_done += c
+        self.stats["prefill_chunks"] += 1
+        if seq.prefill_done == len(prompt):
+            tok = self._sample_first(seq, logits)
+            self._emit(seq, tok)
+            if (tok == self.engine.config.eos_token
+                    or seq.req.max_new_tokens <= 1):
+                self._finish(seq)
+            else:
+                seq.state = _RUNNING
+
+    def _decode_step(self):
+        running = [s for s in self._slot_seq
+                   if s is not None and s.state == _RUNNING]
+        if not running:
+            return
+        # Every running slot needs its next token's page mapped; one that
+        # can't get it (pool dry, outranked by everyone) is preempted
+        # itself rather than silently dropping KV writes.
+        for seq in list(running):
+            if seq.state != _RUNNING:
+                continue  # evicted as an earlier sequence's victim
+            if seq.ctx_len >= self.capacity_tokens and self.manager.is_paged:
+                self._finish(seq, truncated=True)
+            elif not self._try_alloc(seq, seq.ctx_len + 1):
+                self._evict(seq)
+        # _try_alloc may have evicted sequences anywhere in the list.
+        running = [s for s in running if s.state == _RUNNING]
+        if not running:
+            return
+        cfg = self.engine.config
+        last = np.full((self.slots, 1), cfg.pad_token, np.int32)
+        temps = np.zeros((self.slots,), np.float32)
+        topks = np.zeros((self.slots,), np.int32)
+        active = np.zeros((self.slots,), bool)
+        for seq in running:
+            last[seq.slot, 0] = seq.tokens[-1]
+            temps[seq.slot] = seq.req.temperature
+            topks[seq.slot] = seq.req.top_k
+            active[seq.slot] = True
+        self._cache, toks, self._key = self._decode_fn()(
+            self.engine._params, self._cache, jnp.asarray(last), self._key,
+            jnp.asarray(temps), jnp.asarray(topks), jnp.asarray(active))
+        toks = np.asarray(toks)
+        self.stats["decode_steps"] += 1
+        for seq in running:
+            tok = int(toks[seq.slot])
+            self._emit(seq, tok)
+            if (len(seq.tokens) >= seq.req.max_new_tokens
+                    or tok == cfg.eos_token):
+                self._finish(seq)
+
+    def step(self) -> bool:
+        """One scheduler iteration: fill slots, one prefill chunk, one fused
+        decode step. Returns whether any work remains."""
+        self._fill_slots()
+        self._prefill_one()
+        self._decode_step()
+        return self.has_work
+
+    # ----------------------------------------------------------- batch API
+
+    def run(self, requests: List[ServeRequest]) -> List[GenerationResult]:
+        """Serve a request list to completion (the ``engine.serve``-shaped
+        batch entry point; the gateway drives :meth:`step` incrementally)."""
+        for r in requests:
+            self.submit(r)
+        guard = 0
+        while self.step():
+            guard += 1
+            if guard > 100_000:
+                raise RuntimeError("scheduler livelock (pool too small for "
+                                   "any single sequence?)")
+        out = []
+        for r in requests:
+            seq = self._done[r.request_id]
+            ttft = max(seq.t_first - seq.t_submit, 0.0)
+            n = len(seq.tokens)
+            if n > 1:
+                tpot = (seq.t_done - seq.t_first) / (n - 1)
+            else:
+                tpot = ttft  # single-token request: prefill was the work
+            out.append(GenerationResult(r.request_id, seq.tokens,
+                                        ttft_s=ttft, tpot_s=tpot))
+        return out
+
+    def is_done(self, request_id: int) -> bool:
+        return request_id in self._done
+
+    def result(self, request_id: int) -> Optional[GenerationResult]:
+        seq = self._done.get(request_id)
+        if seq is None:
+            return None
+        n = len(seq.tokens)
+        ttft = max(seq.t_first - seq.t_submit, 0.0)
+        tpot = (seq.t_done - seq.t_first) / (n - 1) if n > 1 else ttft
+        return GenerationResult(request_id, seq.tokens, ttft_s=ttft,
+                                tpot_s=tpot)

@@ -1,0 +1,520 @@
+"""Paged-KV serving subsystem: allocator invariants, paged kernel parity,
+chunked prefill, preemption/eviction, streaming gateway, and the
+2x-concurrency acceptance criterion.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.inference.engine import InferenceEngine, Request
+from repro.kernels import ops, ref
+from repro.layers import CausalLM, Decoder, Repeat, TransformerLayer
+from repro.serving import (
+    BlockAllocator,
+    SamplingParams,
+    Scheduler,
+    ServeRequest,
+    ServingGateway,
+)
+
+
+def _tiny_lm(layout="dense", num_pages=None, page=8, decode_impl="ref",
+             vocab=48, dim=32):
+    layer = TransformerLayer.default_config().set(input_dim=dim)
+    layer.self_attention.set(num_heads=4, num_kv_heads=2, impl="ref",
+                             kv_cache_dtype=jnp.float32,
+                             kv_cache_layout=layout, page_size=page,
+                             num_pages=num_pages, decode_impl=decode_impl,
+                             kernel_interpret=(decode_impl == "flash_decode"))
+    layer.feed_forward.set(hidden_dim=dim * 2)
+    return CausalLM.default_config().set(
+        name="lm",
+        decoder=Decoder.default_config().set(
+            vocab_size=vocab, dim=dim,
+            stack=Repeat.default_config().set(layer=layer, num_layers=2,
+                                              remat_policy=None)))
+
+
+def _engine(model_cfg, max_len=32, slots=4):
+    cfg = InferenceEngine.default_config().set(
+        name="engine", model=model_cfg, max_len=max_len, slots=slots)
+    engine = cfg.instantiate()
+    params = engine.model.initialize_parameters_recursively(jax.random.PRNGKey(0))
+    engine.load(params)
+    return engine
+
+
+# ------------------------------- allocator -----------------------------------
+
+
+def test_allocator_basics():
+    a = BlockAllocator(8)  # 7 usable, page 0 reserved
+    assert a.capacity == 7
+    pages = a.alloc(3)
+    assert len(pages) == 3 and 0 not in pages
+    assert a.num_free == 4 and a.num_in_use == 3
+    assert a.alloc(5) is None  # insufficient: None, not an exception
+    a.free(pages)
+    assert a.num_free == 7 and a.num_in_use == 0
+
+
+def test_allocator_double_free_raises():
+    a = BlockAllocator(4)
+    pages = a.alloc(2)
+    a.free(pages)
+    with pytest.raises(ValueError, match="unallocated"):
+        a.free(pages)
+    with pytest.raises(ValueError, match="unallocated"):
+        a.free([0])  # the null page was never handed out
+
+
+def test_allocator_churn_never_leaks_or_double_allocates():
+    """Randomized alloc/free churn: live pages stay disjoint, page 0 never
+    appears, and after freeing everything the pool is whole again."""
+    rng = np.random.default_rng(0)
+    a = BlockAllocator(33)
+    live = []
+    for _ in range(500):
+        if live and rng.random() < 0.45:
+            i = int(rng.integers(len(live)))
+            a.free(live.pop(i))
+        else:
+            got = a.alloc(int(rng.integers(1, 5)))
+            if got is not None:
+                live.append(got)
+        flat = [p for pages in live for p in pages]
+        assert len(flat) == len(set(flat)), "page double-allocated"
+        assert 0 not in flat, "null page allocated"
+        assert a.num_in_use + a.num_free == a.capacity, "pages leaked"
+    for pages in live:
+        a.free(pages)
+    assert a.num_free == a.capacity and a.num_in_use == 0
+
+
+# --------------------------- paged kernel parity -----------------------------
+
+
+def _paged_fixture():
+    B, Hq, Hkv, D = 2, 4, 2, 16
+    P, page = 7, 8
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    k_pool = jax.random.normal(ks[1], (P, page, Hkv, D))
+    v_pool = jax.random.normal(ks[2], (P, page, Hkv, D))
+    # seq 0: pages [3, 1] holding 13 tokens; seq 1: page [5] holding 4.
+    tbl = jnp.asarray([[3, 1, -1], [5, -1, -1]], jnp.int32)
+    pos_pool = jnp.full((P, page), -1, jnp.int32)
+    pos_pool = pos_pool.at[3].set(jnp.arange(8)).at[1, :5].set(jnp.arange(8, 13))
+    pos_pool = pos_pool.at[5, :4].set(jnp.arange(4))
+    return ks[0], k_pool, v_pool, pos_pool, tbl
+
+
+@pytest.mark.parametrize("Sq", [1, 3])
+def test_paged_flash_decode_matches_gathered_reference(Sq):
+    """The scalar-prefetch paged kernel == XLA-gather + reference oracle,
+    for single- and multi-step (chunked prefill shaped) queries."""
+    qkey, k_pool, v_pool, pos_pool, tbl = _paged_fixture()
+    q = jax.random.normal(qkey, (2, Sq, 4, 16))
+    q_pos = jnp.asarray([[13 + i for i in range(Sq)],
+                         [4 + i for i in range(Sq)]], jnp.int32)
+    out = ops.decode_attention(q, k_pool, v_pool, q_positions=q_pos,
+                               k_positions=pos_pool, page_tables=tbl,
+                               interpret=True)
+    kg, vg, kposg = ops.paged_gather_kv(k_pool, v_pool, pos_pool, tbl)
+    expect = ref.reference_attention(q, kg, vg, q_positions=q_pos,
+                                     k_positions=kposg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_paged_flash_decode_fully_unmapped_sequence_is_finite():
+    """A sequence whose table is all -1 (fresh slot) must produce zeros, not
+    NaN — unmapped pages are masked via the table, not page contents."""
+    qkey, k_pool, v_pool, pos_pool, tbl = _paged_fixture()
+    q = jax.random.normal(qkey, (2, 1, 4, 16))
+    tbl = tbl.at[1].set(-1)
+    out = ops.decode_attention(q, k_pool, v_pool,
+                               q_positions=jnp.asarray([[13], [0]]),
+                               k_positions=pos_pool, page_tables=tbl,
+                               interpret=True)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(np.asarray(out[1]), 0.0, atol=1e-6)
+
+
+# --------------------------- paged layer / engine ----------------------------
+
+
+@pytest.mark.parametrize("decode_impl", ["ref", "flash_decode"])
+def test_paged_generate_matches_dense(decode_impl):
+    """kv_cache_layout is semantics-free: full-residency paged generation
+    (identity page tables) == dense generation, for both decode impls."""
+    prompts = np.asarray(jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 48))
+    t_dense, _ = _engine(_tiny_lm()).generate(prompts, max_new_tokens=6)
+    t_paged, _ = _engine(_tiny_lm("paged", decode_impl=decode_impl)).generate(
+        prompts, max_new_tokens=6)
+    np.testing.assert_array_equal(t_dense, t_paged)
+
+
+def test_paged_rejects_sliding_window():
+    cfg = _tiny_lm("paged")
+    cfg.decoder.stack.layer.self_attention.set(sliding_window=8)
+    with pytest.raises(ValueError, match="sliding_window"):
+        _engine(cfg)
+
+
+def test_scheduler_requires_explicit_num_pages_for_paged():
+    engine = _engine(_tiny_lm("paged"))  # num_pages=None: full residency
+    with pytest.raises(ValueError, match="num_pages"):
+        Scheduler(engine)
+
+
+def test_scheduler_rejects_prompt_beyond_capacity():
+    engine = _engine(_tiny_lm("paged", num_pages=1 + 4, page=4))  # 16 tokens
+    sched = Scheduler(engine)
+    with pytest.raises(ValueError, match="exceeds paged KV capacity"):
+        sched.submit(ServeRequest(request_id=0,
+                                  prompt=np.zeros(20, np.int32)))
+
+
+def test_scheduler_rejects_empty_prompt():
+    engine = _engine(_tiny_lm("paged", num_pages=1 + 8))
+    sched = Scheduler(engine)
+    with pytest.raises(ValueError, match="empty prompt"):
+        sched.submit(ServeRequest(request_id=0,
+                                  prompt=np.zeros(0, np.int32)))
+
+
+def test_scheduler_capacity_bounded_by_table_width():
+    """A pool larger than one page-table row must not let a sequence index
+    past its table: generation truncates at n_logical * page_size instead
+    of crashing."""
+    # max_len=16, page=4 -> 4 table rows (16 tokens/seq); pool of 11 usable
+    # pages (44 tokens) exceeds one row on purpose.
+    engine = _engine(_tiny_lm("paged", num_pages=12, page=4),
+                     max_len=16, slots=2)
+    sched = Scheduler(engine, prefill_chunk=8)
+    assert sched.capacity_tokens == 16
+    rng = np.random.default_rng(11)
+    res = sched.run([ServeRequest(request_id=0,
+                                  prompt=rng.integers(0, 48, size=(10,)),
+                                  max_new_tokens=20)])
+    # 10 prompt + 6 generated fill the 16-token table; truncated, not crashed.
+    assert len(res[0].tokens) <= 7 and sched.stats["truncated"] == 1
+
+
+def test_generate_rejects_underprovisioned_paged_pool():
+    """generate() needs full-residency identity tables; a serving-sized
+    pool must fail loudly, not silently drop every KV write."""
+    engine = _engine(_tiny_lm("paged", num_pages=12), max_len=32, slots=4)
+    prompts = np.asarray(jax.random.randint(jax.random.PRNGKey(2), (4, 8), 0, 48))
+    with pytest.raises(ValueError, match="below full residency"):
+        engine.generate(prompts, max_new_tokens=4)
+
+
+# ------------------------------ chunked prefill ------------------------------
+
+
+@pytest.mark.parametrize("chunk", [4, 16])
+def test_chunked_prefill_matches_unchunked(chunk):
+    """Token streams are identical whether a prompt is prefilled whole
+    (generate) or in power-of-two chunks through the scheduler."""
+    engine = _engine(_tiny_lm("paged", num_pages=1 + 16), slots=4)
+    dense = _engine(_tiny_lm())
+    rng = np.random.default_rng(0)
+    lens = [5, 9, 16, 3, 12]
+    prompts = [rng.integers(0, 48, size=(n,)) for n in lens]
+    sched = Scheduler(engine, prefill_chunk=chunk)
+    res = sched.run([ServeRequest(request_id=i, prompt=p, max_new_tokens=4)
+                     for i, p in enumerate(prompts)])
+    for i, r in enumerate(res):
+        expect, _ = dense.generate(prompts[i][None, :], max_new_tokens=4)
+        np.testing.assert_array_equal(np.asarray(r.tokens), expect[0])
+    # Compiled chunk programs stay within the power-of-two decomposition.
+    chunk_sizes = [k[1] for k in engine._jit_fns
+                   if isinstance(k, tuple) and k[0] == "serve_chunk"]
+    assert chunk_sizes and max(chunk_sizes) <= chunk
+
+
+def test_chunked_prefill_interleaves_with_decode():
+    """A long prompt must not stall in-flight decodes: the short request
+    streams tokens between the long prompt's chunks (per-iteration stall
+    bounded by the chunk budget)."""
+    engine = _engine(_tiny_lm("paged", num_pages=1 + 16), slots=2)
+    sched = Scheduler(engine, prefill_chunk=4)
+    rng = np.random.default_rng(1)
+    order = []
+    # The short request is decoding when the long prompt arrives: its
+    # 16-token prefill takes 4 chunked iterations, each of which also runs
+    # a decode step for the short request.
+    short_req = ServeRequest(request_id=1, prompt=rng.integers(0, 48, size=(2,)),
+                             max_new_tokens=6, arrival_time=0.0,
+                             on_token=lambda rid, t: order.append(rid))
+    long_req = ServeRequest(request_id=0, prompt=rng.integers(0, 48, size=(16,)),
+                            max_new_tokens=2, arrival_time=0.1,
+                            on_token=lambda rid, t: order.append(rid))
+    sched.submit(short_req)
+    sched.submit(long_req)
+    while sched.step():
+        pass
+    # Several short-request tokens must land BEFORE the long prompt's first
+    # token — iteration-level interleaving, not run-to-completion.
+    first_long = order.index(0)
+    assert order[:first_long].count(1) >= 3, \
+        f"decode stalled behind prefill: {order}"
+
+
+def test_chunked_prefill_recurrent_mixer_matches_generate():
+    """Recurrent mixers bypass paging (O(1) state) but share the chunked
+    prefill path; chunk boundaries must be invisible to the state."""
+    from repro.layers.rwkv import RWKV6Block
+
+    block = RWKV6Block.default_config().set(input_dim=32)
+    block.time_mix.set(head_dim=16, decay_lora_dim=8, wkv_chunk_size=4)
+    block.channel_mix.set(hidden_dim=64)
+    model = CausalLM.default_config().set(
+        name="lm",
+        decoder=Decoder.default_config().set(
+            vocab_size=48, dim=32,
+            stack=Repeat.default_config().set(layer=block, num_layers=2,
+                                              remat_policy=None)))
+    engine = _engine(model, slots=2)
+    sched = Scheduler(engine, prefill_chunk=4)
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, 48, size=(n,)) for n in (6, 11, 3)]
+    res = sched.run([ServeRequest(request_id=i, prompt=p, max_new_tokens=4)
+                     for i, p in enumerate(prompts)])
+    for i, r in enumerate(res):
+        expect, _ = engine.generate(prompts[i][None, :], max_new_tokens=4)
+        np.testing.assert_array_equal(np.asarray(r.tokens), expect[0])
+
+
+# --------------------------- eviction / preemption ---------------------------
+
+
+def test_evict_restore_roundtrip_exact():
+    """When pages run out, the lowest-priority sequence is evicted to host
+    and later restored by re-splicing pages — its token stream must be
+    byte-identical to an uncontended run."""
+    engine = _engine(_tiny_lm("paged", num_pages=1 + 4, page=4),
+                     max_len=16, slots=2)
+    dense = _engine(_tiny_lm(), max_len=16, slots=2)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, 48, size=(6,)) for _ in range(2)]
+    sched = Scheduler(engine, prefill_chunk=4)
+    res = sched.run([
+        ServeRequest(request_id=0, prompt=prompts[0], max_new_tokens=8,
+                     priority=0),
+        ServeRequest(request_id=1, prompt=prompts[1], max_new_tokens=8,
+                     priority=1),
+    ])
+    assert sched.stats["preemptions"] > 0, "pool contention never triggered"
+    assert sched.stats["restores"] == sched.stats["preemptions"]
+    for i, r in enumerate(res):
+        expect, _ = dense.generate(prompts[i][None, :], max_new_tokens=8)
+        np.testing.assert_array_equal(np.asarray(r.tokens), expect[0])
+
+
+def test_scheduler_never_leaks_pages_under_churn():
+    """Allocator + pos-pool invariants after a contended mixed workload:
+    all pages returned, every page's positions invalidated."""
+    engine = _engine(_tiny_lm("paged", num_pages=1 + 6, page=4),
+                     max_len=24, slots=3)
+    sched = Scheduler(engine, prefill_chunk=4)
+    rng = np.random.default_rng(2)
+    reqs = [ServeRequest(request_id=i,
+                         prompt=rng.integers(0, 48, size=(int(rng.integers(2, 14)),)),
+                         max_new_tokens=int(rng.integers(1, 8)),
+                         priority=int(rng.integers(0, 3)))
+            for i in range(10)]
+    res = sched.run(reqs)
+    assert len(res) == 10 and all(r.tokens for r in res)
+    assert sched.allocator.num_in_use == 0, "pages leaked"
+    assert sched.allocator.num_free == sched.allocator.capacity
+    # Every pos_pool entry is invalidated — no stale positions for the next
+    # tenant's mask to trip over.
+    flat = jax.tree_util.tree_flatten_with_path(sched._cache)[0]
+    for path, leaf in flat:
+        if "pos_pool" in jax.tree_util.keystr(path):
+            assert (np.asarray(leaf) == -1).all(), "stale pos_pool entries"
+
+
+# ----------------------------- 2x concurrency --------------------------------
+
+
+def _kv_bytes(engine):
+    cache = engine.init_cache()
+    flat = jax.tree_util.tree_flatten_with_path(cache)[0]
+    total = 0
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        if any(s in name for s in ("'k'", "'v'", "k_pool", "v_pool")):
+            total += leaf.size * leaf.dtype.itemsize
+    return total
+
+
+def test_paged_serves_2x_concurrent_sequences_at_equal_memory():
+    """The acceptance criterion: with the SAME KV byte budget as a dense
+    4-slot engine, the paged engine keeps 8 sequences device-resident
+    simultaneously (each using < max_len) and serves them exactly."""
+    dense = _engine(_tiny_lm(), max_len=32, slots=4)
+    # Dense budget: 4 slots x 32 tokens = 128 token-slots per layer.
+    # Paged: 16 pages x 8 tokens = 128 (15 usable + null) on 8 slots.
+    paged = _engine(_tiny_lm("paged", num_pages=16, page=8),
+                    max_len=32, slots=8)
+    assert _kv_bytes(paged) <= _kv_bytes(dense), "paged pool exceeds budget"
+
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, 48, size=(8,)) for _ in range(8)]
+    sched = Scheduler(paged, prefill_chunk=8)
+    res = sched.run([ServeRequest(request_id=i, prompt=p, max_new_tokens=6)
+                     for i, p in enumerate(prompts)])
+    assert sched.stats["max_concurrent"] == 8, (
+        f"expected 8 device-resident sequences, got "
+        f"{sched.stats['max_concurrent']}")
+    assert sched.stats["preemptions"] == 0  # they genuinely fit
+    for i, r in enumerate(res):
+        expect, _ = dense.generate(prompts[i][None, :], max_new_tokens=6)
+        np.testing.assert_array_equal(np.asarray(r.tokens), expect[0])
+
+
+# ------------------------------- gateway -------------------------------------
+
+
+def test_gateway_stream_matches_generate_greedy():
+    """Streamed tokens == generate() output token-for-token under greedy."""
+    engine = _engine(_tiny_lm("paged", num_pages=1 + 16), slots=4)
+    dense = _engine(_tiny_lm())
+    gw = ServingGateway(engine, prefill_chunk=4)
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, 48, size=(n,)) for n in (5, 9, 3)]
+    rids = [gw.submit(p, sampling=SamplingParams(max_new_tokens=5))
+            for p in prompts]
+    streamed = list(gw.stream(rids[0]))
+    expect, _ = dense.generate(prompts[0][None, :], max_new_tokens=5)
+    np.testing.assert_array_equal(np.asarray(streamed), expect[0])
+    results = gw.drain()
+    for rid, p in zip(rids[1:], prompts[1:]):
+        expect, _ = dense.generate(p[None, :], max_new_tokens=5)
+        np.testing.assert_array_equal(np.asarray(results[rid].tokens),
+                                      expect[0])
+
+
+def test_gateway_callbacks_and_metrics():
+    engine = _engine(_tiny_lm("paged", num_pages=1 + 16), slots=2)
+    gw = ServingGateway(engine, prefill_chunk=4)
+    rng = np.random.default_rng(5)
+    seen = []
+    rid = gw.submit(rng.integers(0, 48, size=(6,)),
+                    sampling=SamplingParams(max_new_tokens=4),
+                    on_token=lambda r, t: seen.append((r, t)))
+    results = gw.drain()
+    assert [t for _, t in seen] == results[rid].tokens
+    assert all(r == rid for r, _ in seen)
+    m = gw.metrics()
+    assert m["completed"] == 1 and m["queue_depth"] == 0
+    assert m["tokens_out"] == 4 and m["tokens_per_s"] > 0
+    assert m["ttft_p50_s"] > 0 and m["tpot_p50_s"] > 0
+    assert 0.0 <= m["block_utilization"] <= 1.0
+    assert results[rid].ttft_s > 0 and results[rid].tpot_s > 0
+
+
+def test_gateway_per_request_sampling():
+    """Greedy and sampled requests batch together; greedy rows stay exact."""
+    engine = _engine(_tiny_lm("paged", num_pages=1 + 16), slots=4)
+    dense = _engine(_tiny_lm())
+    gw = ServingGateway(engine, prefill_chunk=8, seed=7)
+    rng = np.random.default_rng(6)
+    p_greedy = rng.integers(0, 48, size=(8,))
+    p_sampled = rng.integers(0, 48, size=(8,))
+    rid_g = gw.submit(p_greedy, sampling=SamplingParams(max_new_tokens=5))
+    rid_s = gw.submit(p_sampled, sampling=SamplingParams(
+        max_new_tokens=5, temperature=0.9, top_k=8))
+    results = gw.drain()
+    expect, _ = dense.generate(p_greedy[None, :], max_new_tokens=5)
+    np.testing.assert_array_equal(np.asarray(results[rid_g].tokens), expect[0])
+    assert len(results[rid_s].tokens) == 5
+    assert all(0 <= t < 48 for t in results[rid_s].tokens)
+
+
+# --------------------------- engine serve satellites -------------------------
+
+
+def test_serve_per_slot_sampling_greedy_rows_exact():
+    """Mixed greedy/sampled requests in one dense serve batch: greedy rows
+    (and top_k=1 rows at any temperature) match generate exactly."""
+    engine = _engine(_tiny_lm(), slots=4)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, 48, size=(8,)) for _ in range(4)]
+    reqs = [
+        Request(request_id=0, prompt=prompts[0], max_new_tokens=5),
+        Request(request_id=1, prompt=prompts[1], max_new_tokens=5,
+                temperature=0.9),
+        Request(request_id=2, prompt=prompts[2], max_new_tokens=5,
+                temperature=0.9, top_k=1),
+        Request(request_id=3, prompt=prompts[3], max_new_tokens=5),
+    ]
+    res = engine.serve(reqs)
+    for i in (0, 2, 3):  # greedy + top_k=1
+        expect, _ = engine.generate(prompts[i][None, :], max_new_tokens=5)
+        np.testing.assert_array_equal(np.asarray(res[i].tokens), expect[0])
+    assert len(res[1].tokens) == 5
+    assert all(0 <= t < 48 for t in res[1].tokens)
+
+
+def test_serve_first_token_completion_sets_tpot():
+    """A request finishing at its first token reports tpot_s = ttft_s (the
+    prefill was the whole per-token cost), not a dangling 0.0."""
+    engine = _engine(_tiny_lm(), slots=2)
+    rng = np.random.default_rng(8)
+    res = engine.serve([Request(request_id=0,
+                                prompt=rng.integers(0, 48, size=(6,)),
+                                max_new_tokens=1)])
+    assert len(res[0].tokens) == 1
+    assert res[0].tpot_s == pytest.approx(res[0].ttft_s) and res[0].tpot_s > 0
+
+
+def test_serve_fcfs_is_stable():
+    """Equal arrival times keep request order (sort key includes
+    request_id) — and every request still gets its own prompt's tokens."""
+    engine = _engine(_tiny_lm(), slots=1)
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(0, 48, size=(6,)) for _ in range(3)]
+    reqs = [Request(request_id=i, prompt=prompts[i], max_new_tokens=3,
+                    arrival_time=0.0) for i in (2, 0, 1)]
+    res = engine.serve(reqs)
+    for req, r in zip(reqs, res):
+        assert r.request_id == req.request_id
+        expect, _ = engine.generate(
+            prompts[req.request_id][None, :], max_new_tokens=3)
+        np.testing.assert_array_equal(np.asarray(r.tokens), expect[0])
+
+
+# --------------------------- compile-count guard -----------------------------
+
+
+def test_serving_path_compile_count_bounded():
+    """Steady-state guard: after a warm-up workload, a second mixed workload
+    (new lengths/slots/priorities within the same chunk budget) must not
+    trigger a single new compile anywhere in the serving path."""
+    engine = _engine(_tiny_lm("paged", num_pages=1 + 16), slots=4)
+    sched = Scheduler(engine, prefill_chunk=8)
+    rng = np.random.default_rng(10)
+
+    def workload(n0, n):
+        return [ServeRequest(request_id=n0 + i,
+                             prompt=rng.integers(0, 48, size=(int(rng.integers(1, 15)),)),
+                             max_new_tokens=int(rng.integers(1, 6)),
+                             temperature=float(rng.random() < 0.5) * 0.8,
+                             priority=int(rng.integers(0, 2)))
+                for i in range(n)]
+
+    sched.run(workload(0, 8))
+    compiles = {k: fn._cache_size() for k, fn in engine._jit_fns.items()}
+    sched.run(workload(100, 8))
+    after = {k: fn._cache_size() for k, fn in engine._jit_fns.items()}
+    assert after == compiles, f"serving path recompiled: {compiles} -> {after}"
+    # Chunk programs are bounded by the power-of-two decomposition.
+    n_chunk_fns = sum(1 for k in engine._jit_fns
+                      if isinstance(k, tuple) and k[0] == "serve_chunk")
+    assert n_chunk_fns <= 4  # chunks of 8, 4, 2, 1
