@@ -44,6 +44,7 @@ __all__ = [
     "maybe_instantiate",
     "maybe_set",
     "visit_config",
+    "update_configs_recursively",
     "replace_config",
     "config_to_dict",
     "similar_names",
@@ -330,6 +331,49 @@ def visit_config(cfg: Any, fn: Callable[[str, ConfigBase], None], *, path: str =
     elif isinstance(cfg, dict):
         for k, v in cfg.items():
             visit_config(v, fn, path=f"{path}[{k!r}]")
+
+
+def update_configs_recursively(
+    cfg: Any,
+    updates: Dict[str, Any],
+    *,
+    only_unset: bool = False,
+    where: Optional[Callable[[str, "ConfigBase"], bool]] = None,
+) -> int:
+    """Sets ``field=value`` on every reachable config declaring that field.
+
+    This is the engine behind cross-cutting config levers (dtype policy,
+    kernel selection, remat policy): one call touches every module in an
+    arbitrarily deep experiment tree — the paper's ~10-LoC-complexity
+    mechanism, without writing a bespoke visitor each time.
+
+    ``only_unset`` restricts to fields currently REQUIRED/None (parent →
+    child propagation semantics); ``where(path, cfg)`` optionally filters
+    target configs. ConfigBase values are cloned per site so sites never
+    alias. Returns the number of configs updated.
+    """
+    count = 0
+
+    def visit(path, node):
+        nonlocal count
+        if where is not None and not where(path, node):
+            return
+        hit = False
+        for field, value in updates.items():
+            if field not in node.keys():
+                continue
+            if only_unset:
+                cur = getattr(node, field)
+                if not (isinstance(cur, RequiredFieldValue) or cur is None):
+                    continue
+            setattr(node, field,
+                    value.clone() if isinstance(value, ConfigBase) else value)
+            hit = True
+        if hit:
+            count += 1
+
+    visit_config(cfg, visit)
+    return count
 
 
 def replace_config(

@@ -14,7 +14,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
-from repro.kernels.flash_attention import flash_attention_forward
+from repro.kernels.flash_attention import (
+    flash_attention as _flash_attention_vjp,
+)
 from repro.kernels.flash_decode import (
     flash_decode_forward,
     paged_flash_decode_forward,
@@ -73,6 +75,10 @@ def flash_attention(
 ) -> jax.Array:
     """Flash attention for contiguous self-attention (q/k share positions).
 
+    Differentiable: the Pallas kernel carries a recompute-based custom_vjp
+    (dKV + dQ passes), so this is legal under ``jax.grad`` and serves as the
+    training kernel, not just the serving/prefill path.
+
     Decode steps (ragged cache positions) fall back to the reference path —
     a 1-token query is GEMV-bound, not a flash-kernel shape.
     """
@@ -81,7 +87,7 @@ def flash_attention(
             q, k, v, q_positions=q_positions, k_positions=k_positions,
             causal=causal, sliding_window=sliding_window,
             logit_softcap=logit_softcap, scale=scale)
-    return flash_attention_forward(
+    return _flash_attention_vjp(
         q, k, v, causal=causal, sliding_window=sliding_window,
         logit_softcap=logit_softcap, scale=scale,
         block_q=block_q, block_k=block_k, interpret=interpret)

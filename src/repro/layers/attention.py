@@ -22,7 +22,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.config import REQUIRED, Required, config_class
+from repro.core.config import REQUIRED, Required, config_class, maybe_set
 from repro.core.module import no_context
 from repro.core.utils import PartitionSpecLike, remat_name
 from repro.kernels import ref as kernel_ref
@@ -120,18 +120,19 @@ class MultiheadAttention(BaseLayer):
             weight_partition=cfg.qkv_weight_partition,
             param_dtype=cfg.param_dtype,
         )
+        maybe_set(proj, dtype_policy=cfg.dtype_policy)
         self._add_child("q_proj", proj.clone(output_dim=cfg.num_heads * cfg.head_dim))
         self._add_child("k_proj", proj.clone(output_dim=cfg.num_kv_heads * cfg.head_dim))
         self._add_child("v_proj", proj.clone(output_dim=cfg.num_kv_heads * cfg.head_dim))
         self._add_child(
             "o_proj",
-            cfg.proj.clone().set(
+            maybe_set(cfg.proj.clone().set(
                 input_dim=cfg.num_heads * cfg.head_dim,
                 output_dim=cfg.input_dim,
                 bias=cfg.out_bias,
                 weight_partition=cfg.out_weight_partition,
                 param_dtype=cfg.param_dtype,
-            ),
+            ), dtype_policy=cfg.dtype_policy),
         )
         if cfg.rope is not None:
             rope_cfg = cfg.rope.clone()
@@ -143,6 +144,7 @@ class MultiheadAttention(BaseLayer):
 
     def _project_qkv(self, x: jax.Array, positions: jax.Array):
         cfg = self.config
+        x = self._to_compute(x)
         B, S, _ = x.shape
         q = self.q_proj(x)
         k = self.k_proj(x)

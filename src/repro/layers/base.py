@@ -5,6 +5,15 @@ Parameters are declared as :class:`ParameterSpec` (shape, dtype, initializer,
 paper's config-based parallelism (§4.2) hinges on. The trainer and the AOT
 dry-run consume the spec tree to build NamedShardings; layers never touch
 devices.
+
+Mixed precision is a :class:`DtypePolicy` carried by every layer config:
+inputs are cast to ``compute_dtype`` at module boundaries (layers already
+cast their params to the input dtype at use-sites, so params follow), while
+fp32 islands — norms, softmax, routing, the loss — keep their explicit
+accumulation dtypes. Setting bf16-compute/fp32-master training for an entire
+model is therefore one ``visit_config`` pass over the trainer config
+(``trainer.mesh_rules.DtypePolicyModifier``), never a layer edit — the
+paper's ~10-LoC cross-cutting-change mechanism (§4.2) applied to precision.
 """
 
 from __future__ import annotations
@@ -17,12 +26,14 @@ from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
 import jax
 import jax.numpy as jnp
 
-from repro.core.config import REQUIRED, Required, config_class
+from repro.core.config import REQUIRED, ConfigBase, Required, config_class
 from repro.core.module import Module
 from repro.core.utils import PartitionSpecLike, maybe_shard
 
 __all__ = [
     "ParameterSpec",
+    "DtypePolicy",
+    "bf16_policy",
     "BaseLayer",
     "Initializer",
     "constant_init",
@@ -32,6 +43,35 @@ __all__ = [
     "fan_in_init",
     "uniform_scale_init",
 ]
+
+
+@config_class
+class DtypePolicy(ConfigBase):
+    """Per-layer mixed-precision policy (all fields None = current behaviour).
+
+    ``param_dtype``: storage dtype of params that follow the layer's default
+        param dtype (explicit fp32 islands like Mamba's ``A_log`` keep their
+        declared dtype). None keeps each layer's ``param_dtype`` field.
+    ``compute_dtype``: floating inputs are cast to this dtype at every module
+        boundary; params follow via the existing ``astype(x.dtype)``
+        use-site casts. None = compute follows inputs untouched.
+    ``output_dtype``: dtype of model *outputs* (logits); applied by heads.
+        None = leave in compute dtype.
+    ``grad_dtype``: dtype gradients are accumulated in (grad-accumulation
+        buffers; the trainer reads it via ``DtypePolicyModifier``). None =
+        accumulate in the param dtype.
+    """
+
+    param_dtype: Optional[Any] = None
+    compute_dtype: Optional[Any] = None
+    output_dtype: Optional[Any] = None
+    grad_dtype: Optional[Any] = None
+
+
+def bf16_policy() -> DtypePolicy:
+    """The production default: fp32 master params, bf16 compute, fp32 grad
+    accumulation (grad_dtype=None -> param dtype)."""
+    return DtypePolicy().set(compute_dtype=jnp.bfloat16)
 
 Initializer = Callable[[jax.Array, Tuple[int, ...], Any], jax.Array]
 
@@ -106,11 +146,62 @@ class BaseLayer(Module):
         # Optional override of every own-param partition spec (layers define
         # per-param defaults in _create_layer_parameter_specs).
         param_partition_spec: Optional[Any] = None
+        # Mixed-precision policy (None = dtypes follow inputs / param_dtype).
+        # Set on every layer in one pass by DtypePolicyModifier.
+        dtype_policy: Optional[DtypePolicy] = None
 
     # --- parameter declaration (override in subclasses) ---------------------
 
     def _create_layer_parameter_specs(self) -> Dict[str, ParameterSpec]:
         return {}
+
+    # --- dtype policy -------------------------------------------------------
+
+    def _resolve_param_spec_dtype(self, spec: ParameterSpec) -> ParameterSpec:
+        """Applies cfg.param_dtype defaults + the policy's param_dtype.
+
+        The policy only overrides specs that *follow* the layer param dtype;
+        explicitly-pinned dtypes (fp32 islands like Mamba's ``A_log``) stay.
+        """
+        cfg = self.config
+        if spec.dtype is None:
+            spec = dataclasses.replace(spec, dtype=cfg.param_dtype)
+        policy = cfg.dtype_policy
+        if (policy is not None and policy.param_dtype is not None
+                and spec.dtype == cfg.param_dtype
+                and jnp.issubdtype(jnp.dtype(spec.dtype), jnp.floating)):
+            spec = dataclasses.replace(spec, dtype=policy.param_dtype)
+        return spec
+
+    @property
+    def compute_dtype(self) -> Optional[Any]:
+        policy = self.config.dtype_policy
+        return policy.compute_dtype if policy is not None else None
+
+    def _to_compute(self, *xs):
+        """Casts floating arrays to the policy compute dtype (module-boundary
+        input cast; a no-op without a policy). Non-float leaves pass through."""
+        dt = self.compute_dtype
+        if dt is None:
+            return xs[0] if len(xs) == 1 else xs
+
+        def cast(x):
+            if (hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating)
+                    and x.dtype != jnp.dtype(dt)):
+                return x.astype(dt)
+            return x
+
+        out = tuple(cast(x) for x in xs)
+        return out[0] if len(out) == 1 else out
+
+    def _to_output(self, x: jax.Array) -> jax.Array:
+        """Casts a head/model output to the policy output dtype (if set)."""
+        policy = self.config.dtype_policy
+        if policy is None or policy.output_dtype is None:
+            return x
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(policy.output_dtype)
+        return x
 
     # --- recursive spec/init (structural: no InvocationContext needed) ------
 
@@ -120,9 +211,7 @@ class BaseLayer(Module):
         for name, spec in own.items():
             if self.config.param_partition_spec is not None:
                 spec = dataclasses.replace(spec, mesh_axes=self.config.param_partition_spec)
-            if spec.dtype is None:
-                spec = dataclasses.replace(spec, dtype=self.config.param_dtype)
-            specs[name] = spec
+            specs[name] = self._resolve_param_spec_dtype(spec)
         for child_name, child in self._children.items():
             if isinstance(child, BaseLayer):
                 child_specs = child.create_parameter_specs_recursively()
@@ -134,8 +223,7 @@ class BaseLayer(Module):
         params: Dict[str, Any] = {}
         own = self._create_layer_parameter_specs()
         for name, spec in own.items():
-            if spec.dtype is None:
-                spec = dataclasses.replace(spec, dtype=self.config.param_dtype)
+            spec = self._resolve_param_spec_dtype(spec)
             sub_key = jax.random.fold_in(prng_key, _stable_hash(name))
             params[name] = spec.initialize(sub_key)
         for child_name, child in self._children.items():

@@ -91,6 +91,7 @@ class Linear(BaseLayer):
         return specs
 
     def forward(self, x: jax.Array) -> jax.Array:
+        x = self._to_compute(x)
         w = self.state["weight"].astype(x.dtype)
         y = x @ w
         if self.config.bias:
@@ -127,10 +128,11 @@ class Embedding(BaseLayer):
         out = jnp.take(w, ids, axis=0)
         if self.config.scale_by_sqrt_dim:
             out = out * jnp.sqrt(jnp.asarray(self.config.dim, out.dtype))
-        return out
+        return self._to_compute(out)
 
     def attend(self, x: jax.Array) -> jax.Array:
         """Tied LM head: logits = x @ E^T."""
+        x = self._to_compute(x)
         w = self.state["weight"].astype(x.dtype)
         return x @ w.T
 
@@ -169,6 +171,7 @@ class LayerNorm(BaseLayer):
 
     def forward(self, x: jax.Array) -> jax.Array:
         cfg = self.config
+        x = self._to_compute(x)  # fp32 accumulation below is policy-invariant
         xf = x.astype(jnp.float32)
         mean = jnp.mean(xf, axis=-1, keepdims=True)
         var = jnp.var(xf, axis=-1, keepdims=True)
@@ -201,6 +204,7 @@ class RMSNorm(BaseLayer):
 
     def forward(self, x: jax.Array) -> jax.Array:
         cfg = self.config
+        x = self._to_compute(x)  # fp32 accumulation below is policy-invariant
         scale = self.state["scale"]
         if cfg.unit_offset:
             scale = scale + 1.0

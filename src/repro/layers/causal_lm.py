@@ -14,7 +14,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.config import REQUIRED, ConfigBase, Required, config_class
+from repro.core.config import REQUIRED, ConfigBase, Required, config_class, maybe_set
 from repro.core.module import no_context
 from repro.layers.base import BaseLayer, ParameterSpec, normal_init
 from repro.layers.transformer import Decoder
@@ -57,7 +57,10 @@ class CausalLM(BaseLayer):
 
     def __init__(self, cfg, *, parent=None):
         super().__init__(cfg, parent=parent)
-        self._add_child("decoder", cfg.decoder)
+        decoder = cfg.decoder.clone()
+        if "dtype_policy" in decoder.keys():
+            maybe_set(decoder, dtype_policy=cfg.dtype_policy)
+        self._add_child("decoder", decoder)
 
     def forward(self, batch: Dict[str, Any]) -> Tuple[jax.Array, Dict[str, Any]]:
         cfg = self.config
@@ -163,7 +166,10 @@ class MaskedLM(BaseLayer):
 
     def __init__(self, cfg, *, parent=None):
         super().__init__(cfg, parent=parent)
-        self._add_child("decoder", cfg.decoder)
+        decoder = cfg.decoder.clone()
+        if "dtype_policy" in decoder.keys():
+            maybe_set(decoder, dtype_policy=cfg.dtype_policy)
+        self._add_child("decoder", decoder)
 
     def _create_layer_parameter_specs(self):
         return {"mask_emb": ParameterSpec(

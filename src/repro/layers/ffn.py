@@ -23,6 +23,7 @@ from repro.core.config import (
     Required,
     config_class,
     config_for_function,
+    maybe_set,
 )
 from repro.core.utils import PartitionSpecLike, remat_name
 from repro.layers.base import BaseLayer
@@ -72,16 +73,18 @@ class FeedForward(BaseLayer):
         up = cfg.proj.clone().set(
             input_dim=cfg.input_dim, output_dim=hidden, bias=cfg.bias,
             weight_partition=cfg.up_weight_partition, param_dtype=cfg.param_dtype)
+        maybe_set(up, dtype_policy=cfg.dtype_policy)
         for i in range(len(acts)):
             self._add_child(f"up_proj{i}" if len(acts) > 1 else "up_proj", up.clone())
-        self._add_child(
-            "down_proj",
-            cfg.proj.clone().set(
-                input_dim=hidden, output_dim=out_dim, bias=cfg.bias,
-                weight_partition=cfg.down_weight_partition, param_dtype=cfg.param_dtype))
+        down = cfg.proj.clone().set(
+            input_dim=hidden, output_dim=out_dim, bias=cfg.bias,
+            weight_partition=cfg.down_weight_partition, param_dtype=cfg.param_dtype)
+        maybe_set(down, dtype_policy=cfg.dtype_policy)
+        self._add_child("down_proj", down)
 
     def forward(self, x: jax.Array) -> jax.Array:
         cfg = self.config
+        x = self._to_compute(x)
         acts = cfg.activation if isinstance(cfg.activation, (tuple, list)) else (cfg.activation,)
         if len(acts) == 1:
             h = get_activation(acts[0])(self.up_proj(x))

@@ -23,6 +23,7 @@ from repro.core.config import (
     FunctionConfigBase,
     Required,
     config_class,
+    maybe_set,
 )
 from repro.core.utils import PartitionSpecLike, remat_name
 from repro.layers.base import BaseLayer, ParameterSpec, fan_in_init, normal_init
@@ -153,6 +154,7 @@ class MoELayer(BaseLayer):
         router.set(input_dim=cfg.input_dim, num_experts=cfg.num_experts,
                    top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
                    dispatch_partition=cfg.dispatch_partition)
+        maybe_set(router, dtype_policy=cfg.dtype_policy)
         self._add_child("router", router)
 
     def _create_layer_parameter_specs(self):
@@ -179,6 +181,9 @@ class MoELayer(BaseLayer):
 
     def forward(self, x: jax.Array) -> jax.Array:
         cfg = self.config
+        # Boundary cast: expert matmuls run in the compute dtype; the router
+        # keeps its fp32 gating/aux-loss island.
+        x = self._to_compute(x)
         B0, S0, D = x.shape
         g = cfg.group_size
         if g and S0 > g and S0 % g == 0:
@@ -236,6 +241,7 @@ class ResidualMoE(BaseLayer):
         for c in (dense, moe):
             if not c.input_dim:
                 c.set(input_dim=cfg.input_dim)
+            maybe_set(c, dtype_policy=cfg.dtype_policy)
         self._add_child("dense", dense)
         self._add_child("moe", moe)
 

@@ -52,6 +52,7 @@ class QuantizedLinear(Linear):
 
     def forward(self, x: jax.Array) -> jax.Array:
         cfg = self.config
+        x = self._to_compute(x)
         w = self.state["weight"]
         xq, x_scale = quantize_int8(x, axis=-1)  # per-token
         wq, w_scale = quantize_int8(w, axis=0)  # per-out-channel

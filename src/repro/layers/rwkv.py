@@ -17,7 +17,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.config import REQUIRED, ConfigBase, Required, config_class
+from repro.core.config import REQUIRED, ConfigBase, Required, config_class, maybe_set
 from repro.core.module import no_context
 from repro.core.utils import PartitionSpecLike, remat_name
 from repro.kernels import ref as kref
@@ -98,6 +98,7 @@ class RWKV6TimeMix(BaseLayer):
 
     def _projections(self, x: jax.Array, shift_prev: Optional[jax.Array]):
         cfg = self.config
+        x = self._to_compute(x)
         B, S, d = x.shape
         H, hd = self._num_heads, cfg.head_dim
         xs = _token_shift(x, shift_prev)
@@ -139,6 +140,7 @@ class RWKV6TimeMix(BaseLayer):
                                    unroll=cfg.wkv_unroll)
 
     def forward(self, x: jax.Array, positions: Optional[jax.Array] = None) -> jax.Array:
+        x = self._to_compute(x)
         r, k, v, w, g = self._projections(x, None)
         out, _ = self._wkv(r, k, v, w, None)
         out = remat_name(out, "mixer_out")
@@ -161,6 +163,7 @@ class RWKV6TimeMix(BaseLayer):
         }
 
     def prefill(self, state, x, positions=None, length=None):
+        x = self._to_compute(x)
         r, k, v, w, g = self._projections(x, state["shift"])
         if length is not None:
             # Bucket padding must leave the wkv state exact: an invalid step
@@ -184,6 +187,7 @@ class RWKV6TimeMix(BaseLayer):
         return new_state, y
 
     def extend_step(self, state, x_step):
+        x_step = self._to_compute(x_step)
         r, k, v, w, g = self._projections(x_step, state["shift"])
         out, wkv_state = kref.reference_wkv6_recurrent(
             r, k, v, w, self.state["u"], state["wkv"])
@@ -224,6 +228,7 @@ class RWKV6ChannelMix(BaseLayer):
         }
 
     def _core(self, x, shift_prev):
+        x = self._to_compute(x)
         mu = self.state["mu"].astype(x.dtype)
         xs = _token_shift(x, shift_prev)
         xk = x + (xs - x) * mu[0]
@@ -272,6 +277,8 @@ class RWKV6Block(BaseLayer):
             c = c.clone()
             if "input_dim" in c.keys() and not c.input_dim:
                 c.set(input_dim=cfg.input_dim)
+            if "dtype_policy" in c.keys():
+                maybe_set(c, dtype_policy=cfg.dtype_policy)
             return c
 
         self._add_child("ln1", with_dim(cfg.norm))
@@ -285,6 +292,7 @@ class RWKV6Block(BaseLayer):
                 "cm": self.channel_mix.state_partition_specs()}
 
     def forward(self, x, positions=None):
+        x = self._to_compute(x)
         x = self._shard(x, self.config.activation_partition)
         x = x + self.time_mix(self.ln1(x), positions=positions)
         x = x + self.channel_mix(self.ln2(x))

@@ -154,6 +154,7 @@ class MambaMixer(BaseLayer):
         only the first ``length`` tokens update the recurrence and the conv
         tail is taken at the valid frontier (bucket-padded admission)."""
         cfg = self.config
+        x = self._to_compute(x)
         xz = x @ self.state["in_proj"].astype(x.dtype)
         # Constrain BEFORE the split so neither half (nor their backward
         # cotangents) ever exists model-replicated.
@@ -249,6 +250,7 @@ class MambaMixer(BaseLayer):
     def extend_step(self, state, x_step):
         """Sequential decode for S' >= 1 tokens (scan over steps)."""
         cfg = self.config
+        x_step = self._to_compute(x_step)
         B, S_new, _ = x_step.shape
         x_in, z = jnp.split(x_step @ self.state["in_proj"].astype(x_step.dtype), 2, axis=-1)
 

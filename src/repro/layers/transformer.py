@@ -18,7 +18,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 import jax
 import jax.numpy as jnp
 
-from repro.core.config import REQUIRED, ConfigBase, Required, config_class
+from repro.core.config import REQUIRED, ConfigBase, Required, config_class, maybe_set
 from repro.core.module import functional, no_context
 from repro.core.utils import PartitionSpecLike, remat_name
 from repro.layers.attention import MultiheadAttention
@@ -59,6 +59,8 @@ class TransformerLayer(BaseLayer):
                 cur = getattr(c, field)
                 if not cur:
                     c.set(**{field: cfg.input_dim})
+            if "dtype_policy" in c.keys():
+                maybe_set(c, dtype_policy=cfg.dtype_policy)
             return c
 
         self._add_child("attn_norm", with_dim(cfg.norm))
@@ -86,6 +88,7 @@ class TransformerLayer(BaseLayer):
 
     def forward(self, x: jax.Array, positions: Optional[jax.Array] = None) -> jax.Array:
         cfg = self.config
+        x = self._to_compute(x)  # residual stream runs in the compute dtype
         x = self._shard(x, cfg.activation_partition)
         h = self.self_attention(self.attn_norm(x), positions=positions)
         if cfg.use_post_attention_norm:
@@ -106,6 +109,7 @@ class TransformerLayer(BaseLayer):
 
     def prefill(self, state, x, positions=None, length=None):
         cfg = self.config
+        x = self._to_compute(x)
         x = self._shard(x, cfg.activation_partition)
         state, h = self.self_attention.prefill(
             state, self.attn_norm(x), positions=positions, length=length)
@@ -116,6 +120,7 @@ class TransformerLayer(BaseLayer):
 
     def extend_step(self, state, x_step):
         cfg = self.config
+        x_step = self._to_compute(x_step)
         state, h = self.self_attention.extend_step(state, self.attn_norm(x_step))
         if cfg.use_post_attention_norm:
             h = self.post_attn_norm(h)
@@ -141,6 +146,9 @@ class Block(BaseLayer):
         self._layer_names = []
         for i, layer_cfg in enumerate(cfg.layers):
             name = f"layer{i}"
+            layer_cfg = layer_cfg.clone()
+            if "dtype_policy" in layer_cfg.keys():
+                maybe_set(layer_cfg, dtype_policy=cfg.dtype_policy)
             self._add_child(name, layer_cfg)
             self._layer_names.append(name)
 
@@ -231,7 +239,10 @@ class Repeat(BaseLayer):
 
     def __init__(self, cfg, *, parent=None):
         super().__init__(cfg, parent=parent)
-        self._add_child("layer", cfg.layer)
+        layer = cfg.layer.clone()
+        if "dtype_policy" in layer.keys():
+            maybe_set(layer, dtype_policy=self.config.dtype_policy)
+        self._add_child("layer", layer)
 
     # --- stacked params ------------------------------------------------------
 
@@ -369,6 +380,9 @@ class StackedTransformer(BaseLayer):
         self._names = []
         for i, c in enumerate(cfg.layers):
             n = f"layer{i}"
+            c = c.clone()
+            if "dtype_policy" in c.keys():
+                maybe_set(c, dtype_policy=cfg.dtype_policy)
             self._add_child(n, c)
             self._names.append(n)
 
@@ -419,16 +433,20 @@ class Decoder(BaseLayer):
     def __init__(self, cfg, *, parent=None):
         super().__init__(cfg, parent=parent)
         cfg = self.config
-        self._add_child("emb", cfg.emb.clone(
-            num_embeddings=cfg.vocab_size, dim=cfg.dim))
-        self._add_child("stack", cfg.stack)
+        self._add_child("emb", maybe_set(cfg.emb.clone(
+            num_embeddings=cfg.vocab_size, dim=cfg.dim),
+            dtype_policy=cfg.dtype_policy))
+        self._add_child("stack", maybe_set(cfg.stack.clone(),
+                                           dtype_policy=cfg.dtype_policy))
         fn = cfg.final_norm.clone()
         if "input_dim" in fn.keys() and not fn.input_dim:
             fn.set(input_dim=cfg.dim)
+        maybe_set(fn, dtype_policy=cfg.dtype_policy)
         self._add_child("final_norm", fn)
         if cfg.lm_head is not None:
-            self._add_child("lm_head", cfg.lm_head.clone(
-                input_dim=cfg.dim, output_dim=cfg.vocab_size, bias=False))
+            self._add_child("lm_head", maybe_set(cfg.lm_head.clone(
+                input_dim=cfg.dim, output_dim=cfg.vocab_size, bias=False),
+                dtype_policy=cfg.dtype_policy))
         if cfg.emb_dropout:
             self._add_child("dropout", Dropout.default_config().set(rate=cfg.emb_dropout))
 
@@ -445,6 +463,10 @@ class Decoder(BaseLayer):
             x = jnp.concatenate([input_embeddings.astype(text.dtype), text[:, P:]], axis=1)
         if self.config.emb_dropout:
             x = self.dropout(x)
+        # The dtype policy (when set) wins over the legacy activation_dtype
+        # field: the stack runs entirely in the policy compute dtype.
+        if self.compute_dtype is not None:
+            return x.astype(self.compute_dtype)
         return x.astype(self.config.activation_dtype)
 
     def _head(self, h):
@@ -456,7 +478,7 @@ class Decoder(BaseLayer):
             logits = self.emb.attend(h)
         if cfg.logits_softcap:
             logits = cfg.logits_softcap * jnp.tanh(logits / cfg.logits_softcap)
-        return self._shard(logits, cfg.logits_partition)
+        return self._shard(self._to_output(logits), cfg.logits_partition)
 
     def forward(self, input_ids=None, *, input_embeddings=None, positions=None):
         return self.head(self.hidden(

@@ -76,9 +76,25 @@ class Learner(Module):
         return self.tx.init(params)
 
     @no_context
-    def apply_updates(self, grads, opt_state, params):
+    def apply_updates(self, grads, opt_state, params, *,
+                      update_partition_specs=None, param_partition_specs=None):
+        """grads -> (new_params, new_opt_state).
+
+        ``update_partition_specs`` (optional tree of PartitionSpecs matching
+        params) is the ZeRO-1 hook: constraining the gradients to the
+        data-sharded optimizer layout makes GSPMD lower the data-parallel
+        psum into a reduce-scatter, the whole optimizer update then runs on
+        1/N of each tensor per device, and constraining the applied params
+        back to ``param_partition_specs`` is the single (bf16-update-sized)
+        all-gather — no explicit collectives, sharding constraints only.
+        """
+        from repro.trainer.train_step import constrain_tree
+
+        grads = constrain_tree(grads, update_partition_specs)
         updates, new_opt_state = self.tx.update(grads, opt_state, params)
+        updates = constrain_tree(updates, update_partition_specs)
         new_params = jax.tree.map(
             lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(p.dtype),
             params, updates)
+        new_params = constrain_tree(new_params, param_partition_specs)
         return new_params, new_opt_state

@@ -16,7 +16,14 @@ from __future__ import annotations
 import re
 from typing import Any, List, Optional, Sequence, Tuple
 
-from repro.core.config import REQUIRED, ConfigBase, Required, config_class, visit_config
+from repro.core.config import (
+    REQUIRED,
+    ConfigBase,
+    Required,
+    config_class,
+    update_configs_recursively,
+    visit_config,
+)
 from repro.core.module import Module, no_context
 
 __all__ = [
@@ -27,6 +34,8 @@ __all__ = [
     "OffloadOptimizerModifier",
     "GradAccumModifier",
     "KernelBlockModifier",
+    "DtypePolicyModifier",
+    "Zero1Modifier",
     "apply_mesh_rules",
 ]
 
@@ -61,13 +70,8 @@ class RematPolicyModifier(ConfigModifier):
 
     @no_context
     def apply(self, trainer_cfg):
-        policy = self.config.policy
-
-        def visit(path, cfg):
-            if "remat_policy" in cfg.keys():
-                cfg.set(remat_policy=policy)
-
-        visit_config(trainer_cfg, visit)
+        update_configs_recursively(trainer_cfg,
+                                   {"remat_policy": self.config.policy})
         return trainer_cfg
 
 
@@ -83,12 +87,10 @@ class AttentionImplModifier(ConfigModifier):
     @no_context
     def apply(self, trainer_cfg):
         c = self.config
-
-        def visit(path, cfg):
-            if "impl" in cfg.keys() and "kernel_interpret" in cfg.keys():
-                cfg.set(impl=c.impl, kernel_interpret=c.kernel_interpret)
-
-        visit_config(trainer_cfg, visit)
+        update_configs_recursively(
+            trainer_cfg, {"impl": c.impl, "kernel_interpret": c.kernel_interpret},
+            where=lambda path, cfg: ("impl" in cfg.keys()
+                                     and "kernel_interpret" in cfg.keys()))
         return trainer_cfg
 
 
@@ -123,13 +125,49 @@ class KernelBlockModifier(ConfigModifier):
 
     @no_context
     def apply(self, trainer_cfg):
-        c = self.config
+        update_configs_recursively(
+            trainer_cfg, {"blockwise_chunk_size": self.config.chunk_size})
+        return trainer_cfg
 
-        def visit(path, cfg):
-            if "blockwise_chunk_size" in cfg.keys():
-                cfg.set(blockwise_chunk_size=c.chunk_size)
 
-        visit_config(trainer_cfg, visit)
+class DtypePolicyModifier(ConfigModifier):
+    """Mixed precision for an entire experiment in one rule (paper §4.2).
+
+    Sets ``dtype_policy`` on every layer config in the trainer tree (compute
+    dtype casts happen at module boundaries; fp32 islands are untouched) and
+    aligns the trainer's grad-accumulation dtype with the policy. The whole
+    bf16-compute/fp32-master switch for any of the 11 archs is therefore::
+
+        DtypePolicyModifier.default_config().set(
+            policy=DtypePolicy().set(compute_dtype=jnp.bfloat16))
+    """
+
+    @config_class
+    class Config(ConfigModifier.Config):
+        # A repro.layers.base.DtypePolicy config.
+        policy: Required[ConfigBase] = REQUIRED
+
+    @no_context
+    def apply(self, trainer_cfg):
+        policy = self.config.policy
+        update_configs_recursively(trainer_cfg, {"dtype_policy": policy})
+        grad_dtype = getattr(policy, "grad_dtype", None)
+        if grad_dtype is not None and "grad_dtype" in trainer_cfg.keys():
+            trainer_cfg.set(grad_dtype=grad_dtype)
+        return trainer_cfg
+
+
+class Zero1Modifier(ConfigModifier):
+    """ZeRO-1: partition optimizer state along the data axes (config-only)."""
+
+    @config_class
+    class Config(ConfigModifier.Config):
+        enabled: bool = True
+
+    @no_context
+    def apply(self, trainer_cfg):
+        trainer_cfg.set(
+            opt_state_sharding="zero1" if self.config.enabled else "params")
         return trainer_cfg
 
 

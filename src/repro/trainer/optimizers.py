@@ -21,6 +21,8 @@ __all__ = [
     "add_decayed_weights",
     "scale_by_schedule",
     "scale",
+    "with_master_weights",
+    "MasterWeightState",
     "sgd",
     "adamw",
     "linear_warmup_cosine",
@@ -145,6 +147,42 @@ def scale(factor: float) -> GradientTransformation:
     return GradientTransformation(init, update)
 
 
+class MasterWeightState(NamedTuple):
+    master: Any  # fp32 (or master_dtype) copy of the params
+    inner: Any
+
+
+def with_master_weights(inner: GradientTransformation,
+                        master_dtype=jnp.float32) -> GradientTransformation:
+    """fp32 master-weight wrapper for low-precision param storage.
+
+    When the dtype policy stores params in bf16, naive ``p += lr*u`` loses
+    every update smaller than ~2^-8 of the weight magnitude. This wrapper
+    keeps a ``master_dtype`` copy in the optimizer state: the inner
+    transform's update applies to the master, and the emitted update is
+    exactly the delta that lands the low-precision param on
+    ``round(master')`` — so ``params`` always equals the rounded master and
+    training dynamics match fp32 storage. (Param-structured, so ZeRO-1
+    shards the master copy like the moments.)
+    """
+
+    def init(params):
+        master = jax.tree.map(lambda p: p.astype(master_dtype), params)
+        return MasterWeightState(master=master, inner=inner.init(master))
+
+    def update(grads, state, params):
+        assert params is not None, "with_master_weights needs params"
+        updates, inner_state = inner.update(grads, state.inner, state.master)
+        new_master = jax.tree.map(
+            lambda m, u: m + u.astype(master_dtype), state.master, updates)
+        emitted = jax.tree.map(
+            lambda nm, p: nm.astype(p.dtype).astype(jnp.float32)
+            - p.astype(jnp.float32), new_master, params)
+        return emitted, MasterWeightState(master=new_master, inner=inner_state)
+
+    return GradientTransformation(init, update)
+
+
 # ------------------------------- schedules ----------------------------------
 
 
@@ -194,8 +232,15 @@ def adamw(
     weight_decay_scales: Optional[Any] = None,
     max_grad_norm: Optional[float] = 1.0,
     moment_dtype=jnp.float32,
+    master_weight_dtype: Optional[Any] = None,
 ) -> GradientTransformation:
-    """AdamW with optional clipping + schedule; final update is negative."""
+    """AdamW with optional clipping + schedule; final update is negative.
+
+    ``master_weight_dtype`` (e.g. fp32 when the dtype policy stores params
+    in bf16) wraps the whole chain in :func:`with_master_weights`: moments
+    AND the update math run against a full-precision master copy held in
+    the optimizer state (which ZeRO-1 then shards along the data axis).
+    """
     schedule = learning_rate or constant_schedule(peak_lr)
     parts = []
     if max_grad_norm is not None:
@@ -204,4 +249,7 @@ def adamw(
     if weight_decay:
         parts.append(add_decayed_weights(weight_decay, weight_decay_scales))
     parts.append(scale_by_schedule(lambda step: -schedule(step)))
-    return chain(*parts)
+    tx = chain(*parts)
+    if master_weight_dtype is not None:
+        tx = with_master_weights(tx, master_dtype=master_weight_dtype)
+    return tx

@@ -18,7 +18,7 @@ import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.core.config import REQUIRED, ConfigBase, Required, config_class
-from repro.core.module import Module, functional, no_context
+from repro.core.module import Module, no_context
 from repro.core.utils import (
     make_mesh,
     named_sharding,
@@ -28,26 +28,36 @@ from repro.core.utils import (
 )
 from repro.data.input import SyntheticInput
 from repro.layers.base import ParameterSpec
-from repro.trainer.learner import Learner, aggregate_aux_losses
+from repro.trainer.learner import Learner
 from repro.trainer.optimizers import global_norm
+from repro.trainer.train_step import build_train_step, zero1_partition_spec
 
-__all__ = ["SpmdTrainer", "TrainState"]
+__all__ = ["SpmdTrainer", "TrainState", "WatchdogTimeout"]
 
 TrainState = Dict[str, Any]  # {"step", "prng_key", "params", "opt_state"}
 
 
+class WatchdogTimeout(RuntimeError):
+    """A training step exceeded the configured watchdog timeout (§5)."""
+
+
 def opt_state_shardings(opt_state_shapes: Any, params_structure,
-                        param_shardings: Any, mesh) -> Any:
+                        param_shardings: Any, mesh, *,
+                        param_state_shardings: Any = None) -> Any:
     """Shardings for an optimizer state pytree: any subtree whose structure
-    matches the params tree inherits the param shardings; other leaves are
+    matches the params tree inherits ``param_state_shardings`` (ZeRO-1
+    partitioned specs; defaults to the param shardings — moments, master
+    weights, SGD velocity are all param-structured); other leaves are
     replicated (counts, schedules)."""
     from jax.sharding import NamedSharding, PartitionSpec
 
     replicated = NamedSharding(mesh, PartitionSpec()) if mesh else None
+    target = param_state_shardings if param_state_shardings is not None \
+        else param_shardings
 
     def rec(node):
         if jax.tree.structure(node) == params_structure:
-            return param_shardings
+            return target
         if isinstance(node, tuple) and type(node) is not tuple:  # NamedTuple
             return type(node)(*[rec(x) for x in node])
         if isinstance(node, tuple):
@@ -79,11 +89,25 @@ class SpmdTrainer(Module):
         checkpoint_every_n: int = 0
         # Gradient accumulation (microbatching) — memory lever.
         grad_accum_steps: int = 1
+        # Dtype gradients are ACCUMULATED in across microbatches (None ->
+        # each param's dtype). Set by DtypePolicyModifier from the policy's
+        # grad_dtype.
+        grad_dtype: Any = None
+        # Optimizer-state sharding: "params" replicates the opt state like
+        # the params; "zero1" additionally partitions every param-shaped
+        # optimizer leaf (moments, master weights) along the data axes —
+        # per-device optimizer bytes shrink ~Nx on an N-way data mesh.
+        opt_state_sharding: str = "params"
+        zero1_axes: Tuple[str, ...] = ("pod", "data")
         # Optimizer-state host offload (TPU feature; see DESIGN.md for the
         # CPU dry-run substitution).
         offload_optimizer_state: bool = False
         # Runtime resiliency (paper §5).
         watchdog_timeout_s: Optional[float] = None
+        # "warn" prints; "raise" raises WatchdogTimeout at the next
+        # heartbeat after a step overran (the async dispatch returns to the
+        # host every step, so a hung device shows up at the next beat).
+        watchdog_on_timeout: str = "warn"
         sdc_check_every_n: int = 0
 
     def __init__(self, cfg, *, parent=None):
@@ -152,15 +176,35 @@ class SpmdTrainer(Module):
         }
 
     @no_context
+    def zero1_partition_specs(self, mesh=None):
+        """Tree (matching params) of ZeRO-1 PartitionSpecs for param-shaped
+        optimizer-state leaves."""
+        mesh = mesh or self.build_mesh()
+        cfg = self.config
+        return jax.tree.map(
+            lambda s: zero1_partition_spec(s, mesh, cfg.zero1_axes),
+            self.param_specs(),
+            is_leaf=lambda s: isinstance(s, ParameterSpec))
+
+    @no_context
     def state_shardings(self, state_shapes: TrainState, mesh=None):
         from jax.sharding import NamedSharding, PartitionSpec
 
         mesh = mesh or self.build_mesh()
         cfg = self.config
         p_shardings = self.param_shardings(mesh)
+        opt_leaf_sh = None
+        if cfg.opt_state_sharding == "zero1":
+            opt_leaf_sh = jax.tree.map(
+                lambda spec: NamedSharding(mesh, spec),
+                self.zero1_partition_specs(mesh))
+        elif cfg.opt_state_sharding != "params":
+            raise ValueError(
+                f"Unknown opt_state_sharding {cfg.opt_state_sharding!r}; "
+                "expected 'params' or 'zero1'")
         opt_sh = opt_state_shardings(
             state_shapes["opt_state"], jax.tree.structure(state_shapes["params"]),
-            p_shardings, mesh)
+            p_shardings, mesh, param_state_shardings=opt_leaf_sh)
         if cfg.offload_optimizer_state:
             opt_sh = jax.tree.map(
                 lambda s: s.with_memory_kind("pinned_host") if s is not None else s,
@@ -178,66 +222,27 @@ class SpmdTrainer(Module):
     @no_context
     def make_train_step(self) -> Callable[[TrainState, Dict[str, Any]],
                                           Tuple[TrainState, Dict[str, Any]]]:
+        """Builds the jittable step from the composable pieces in
+        ``repro.trainer.train_step`` (loss -> accumulated grads -> sharded
+        optimizer update)."""
         cfg = self.config
-        model = self.model
-        learner = self.learner
-        aux_weight = cfg.learner.aux_loss_weight
-        aux_pattern = cfg.learner.aux_loss_pattern
-        accum = cfg.grad_accum_steps
-
-        def loss_fn(params, batch, step_key):
-            (loss, _aux), col = functional(
-                model, state=params, inputs=(batch,), prng_key=step_key,
-                is_training=True)
-            aux_total = aggregate_aux_losses(col, aux_pattern)
-            total = loss + aux_weight * aux_total
-            return total, {"loss": loss, "aux_loss": aux_total}
-
-        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
-
-        def compute_grads(params, batch, step_key):
-            if accum <= 1:
-                (total, parts), grads = grad_fn(params, batch, step_key)
-                return total, parts, grads
-
-            def microbatch(carry, mb):
-                acc_grads, acc_total, acc_loss, acc_aux = carry
-                mb_key = jax.random.fold_in(step_key, mb["_idx"])
-                (total, parts), grads = grad_fn(params, {k: v for k, v in mb.items()
-                                                         if k != "_idx"}, mb_key)
-                acc_grads = jax.tree.map(jnp.add, acc_grads, grads)
-                return (acc_grads, acc_total + total, acc_loss + parts["loss"],
-                        acc_aux + parts["aux_loss"]), None
-
-            split = {k: v.reshape((accum, v.shape[0] // accum) + v.shape[1:])
-                     for k, v in batch.items()}
-            split["_idx"] = jnp.arange(accum)
-            zero_grads = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-            (grads, total, loss, aux), _ = jax.lax.scan(
-                microbatch, (zero_grads, 0.0, 0.0, 0.0), split)
-            inv = 1.0 / accum
-            grads = jax.tree.map(lambda g: g * inv, grads)
-            return total * inv, {"loss": loss * inv, "aux_loss": aux * inv}, grads
-
-        def train_step(state: TrainState, batch: Dict[str, Any]):
-            step_key = jax.random.fold_in(state["prng_key"], state["step"])
-            total, parts, grads = compute_grads(state["params"], batch, step_key)
-            new_params, new_opt = learner.apply_updates(
-                grads, state["opt_state"], state["params"])
-            metrics = {
-                "total_loss": total,
-                "grad_norm": global_norm(grads),
-                **parts,
-            }
-            new_state = {
-                "step": state["step"] + 1,
-                "prng_key": state["prng_key"],
-                "params": new_params,
-                "opt_state": new_opt,
-            }
-            return new_state, metrics
-
-        return train_step
+        update_specs = param_specs = None
+        if cfg.opt_state_sharding == "zero1":
+            mesh = self.build_mesh()
+            update_specs = self.zero1_partition_specs(mesh)
+            param_specs = jax.tree.map(
+                lambda s: resolve_spec(s.mesh_axes, mesh), self.param_specs(),
+                is_leaf=lambda s: isinstance(s, ParameterSpec))
+        return build_train_step(
+            self.model,
+            self.learner,
+            aux_loss_weight=cfg.learner.aux_loss_weight,
+            aux_loss_pattern=cfg.learner.aux_loss_pattern,
+            grad_accum_steps=cfg.grad_accum_steps,
+            grad_dtype=cfg.grad_dtype,
+            update_partition_specs=update_specs,
+            param_partition_specs=param_specs,
+        )
 
     # -------------------------------------------------------------------- run
 
@@ -254,12 +259,17 @@ class SpmdTrainer(Module):
 
             sample = self.input.make_batch(0)
             batch_sh = self.batch_shardings(sample, mesh)
-            step_fn = jax.jit(
-                self.make_train_step(),
-                in_shardings=(shardings, batch_sh),
-                out_shardings=(shardings, None),
-                donate_argnums=(0,),
-            )
+            # The jitted step is engine-cached: repeated run() calls on one
+            # trainer (warm restarts, resume-after-checkpoint) reuse the
+            # compiled executable — the train step compiles exactly once.
+            if self._jit_step is None:
+                self._jit_step = jax.jit(
+                    self.make_train_step(),
+                    in_shardings=(shardings, batch_sh),
+                    out_shardings=(shardings, None),
+                    donate_argnums=(0,),
+                )
+            step_fn = self._jit_step
 
             start_step = 0
             if cfg.checkpointer is not None:
@@ -269,27 +279,35 @@ class SpmdTrainer(Module):
                     state = jax.device_put(state, shardings)
                     start_step = latest
 
-            watchdog = _Watchdog(cfg.watchdog_timeout_s)
+            watchdog = _Watchdog(cfg.watchdog_timeout_s,
+                                 on_timeout=cfg.watchdog_on_timeout)
             history = []
             it = self.input.batches()
             t0 = time.time()
             last_metrics = {}
-            for step in range(start_step, num_steps):
-                batch = next(it)
-                batch = jax.device_put(batch, batch_sh)
-                watchdog.beat(step)
-                state, metrics = step_fn(state, batch)
-                if cfg.sdc_check_every_n and step % cfg.sdc_check_every_n == 0:
-                    self._sdc_check(batch)
-                if step % cfg.log_every_n == 0 or step == num_steps - 1:
-                    m = {k: float(v) for k, v in metrics.items()}
-                    m["step"] = step
-                    m["steps_per_s"] = (step - start_step + 1) / (time.time() - t0)
-                    history.append(m)
-                    last_metrics = m
-                if (cfg.checkpointer is not None and cfg.checkpoint_every_n
-                        and (step + 1) % cfg.checkpoint_every_n == 0):
-                    self.checkpointer.save(step + 1, jax.device_get(state))
+            try:
+                for step in range(start_step, num_steps):
+                    batch = next(it)
+                    batch = jax.device_put(batch, batch_sh)
+                    watchdog.beat(step)
+                    state, metrics = step_fn(state, batch)
+                    if cfg.sdc_check_every_n and step % cfg.sdc_check_every_n == 0:
+                        self._sdc_check(batch)
+                    if step % cfg.log_every_n == 0 or step == num_steps - 1:
+                        m = {k: float(v) for k, v in metrics.items()}
+                        m["step"] = step
+                        m["steps_per_s"] = (step - start_step + 1) / (time.time() - t0)
+                        history.append(m)
+                        last_metrics = m
+                    if (cfg.checkpointer is not None and cfg.checkpoint_every_n
+                            and (step + 1) % cfg.checkpoint_every_n == 0):
+                        self.checkpointer.save(step + 1, jax.device_get(state))
+            except KeyboardInterrupt:
+                # The watchdog timer interrupts the main thread on timeout
+                # in "raise" mode; convert to the typed error. A genuine
+                # Ctrl-C (watchdog never fired) re-raises unchanged.
+                watchdog.check()
+                raise
             watchdog.stop()
             if cfg.checkpointer is not None:
                 self.checkpointer.wait()
@@ -306,14 +324,44 @@ class SpmdTrainer(Module):
 
 
 class _Watchdog:
-    """Warns (or raises) when a training step exceeds the timeout (§5)."""
+    """Warns (or raises) when a training step exceeds the timeout (§5).
 
-    def __init__(self, timeout_s: Optional[float]):
+    ``on_timeout="warn"`` prints and keeps going; ``on_timeout="raise"``
+    raises :class:`WatchdogTimeout` from the training thread: the timer
+    thread interrupts the main thread (``_thread.interrupt_main()`` — the
+    run loop converts the resulting KeyboardInterrupt), and as a fallback
+    for interrupt-immune blocking calls the next ``beat()``/``stop()``
+    raises directly.
+    """
+
+    def __init__(self, timeout_s: Optional[float], on_timeout: str = "warn"):
         import threading
 
+        if on_timeout not in ("warn", "raise"):
+            raise ValueError(
+                f"watchdog on_timeout must be 'warn' or 'raise', got "
+                f"{on_timeout!r}")
         self.timeout = timeout_s
+        self.on_timeout = on_timeout
         self._timer: Optional[threading.Timer] = None
         self.fired = []
+
+    def _fire(self, step: int):
+        self.fired.append(step)
+        print(f"[watchdog] step {step} exceeded {self.timeout}s")
+        if self.on_timeout == "raise":
+            import _thread
+
+            # Raises KeyboardInterrupt in the main thread (at the next
+            # bytecode boundary) so a hung host loop actually unblocks;
+            # SpmdTrainer.run converts it to WatchdogTimeout via check().
+            _thread.interrupt_main()
+
+    def check(self):
+        if self.fired and self.on_timeout == "raise":
+            raise WatchdogTimeout(
+                f"Training step(s) {self.fired} exceeded the watchdog "
+                f"timeout of {self.timeout}s")
 
     def beat(self, step: int):
         import threading
@@ -321,9 +369,7 @@ class _Watchdog:
         if self.timeout is None:
             return
         self.stop()
-        self._timer = threading.Timer(
-            self.timeout, lambda: self.fired.append(step) or print(
-                f"[watchdog] step {step} exceeded {self.timeout}s"))
+        self._timer = threading.Timer(self.timeout, self._fire, args=(step,))
         self._timer.daemon = True
         self._timer.start()
 
@@ -331,3 +377,4 @@ class _Watchdog:
         if self._timer is not None:
             self._timer.cancel()
             self._timer = None
+        self.check()
