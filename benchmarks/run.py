@@ -1,6 +1,8 @@
 """Benchmark harness: one module per paper table/figure.
 
   bench_loc        — Table 2 (LoC-complexity of RoPE/MoE integration)
+  bench_kernels    — kernel registry: per-op per-backend parity vs ref +
+                     memoized dispatch overhead (<1µs budget)
   bench_train      — Table 3 (training step time / roofline bounds)
   bench_inference  — Table 4 + Fig 5 (TTFT / TPOT / throughput / cont. batching)
   bench_serving    — serving load: Poisson arrivals through the paged
@@ -20,6 +22,7 @@ import traceback
 def main() -> None:
     from benchmarks import (
         bench_inference,
+        bench_kernels,
         bench_loc,
         bench_scaling,
         bench_serving,
@@ -27,8 +30,8 @@ def main() -> None:
     )
 
     print("name,us_per_call,derived")
-    for mod in (bench_loc, bench_train, bench_inference, bench_serving,
-                bench_scaling):
+    for mod in (bench_loc, bench_kernels, bench_train, bench_inference,
+                bench_serving, bench_scaling):
         try:
             rows = mod.run()
         except Exception as e:  # noqa: BLE001

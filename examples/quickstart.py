@@ -23,7 +23,6 @@ from repro.trainer.trainer import SpmdTrainer
 def main():
     # --- 1. compose a small transformer LM entirely from configs ----------
     attn = c.attention_cfg(num_heads=4, num_kv_heads=2, rope_theta=10000.0)
-    attn.set(impl="ref")
     layer = c.layer_cfg(64, attn, c.ffn_cfg(128))
     decoder = c.decoder_cfg(vocab_size=64, dim=64,
                             stack=c.repeat_cfg(layer, 2, remat=None))

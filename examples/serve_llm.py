@@ -29,7 +29,7 @@ def build_model(vocab=64, dim=64):
     # The serving subsystem is config-assembled (§4.2): the SAME modules
     # train dense and serve paged — one knob, no model change. Half the
     # dense engine's full-residency pages: paging pressure is the point.
-    attn.set(impl="ref", kv_cache_layout="paged", page_size=PAGE_SIZE,
+    attn.set(kv_cache_layout="paged", page_size=PAGE_SIZE,
              num_pages=1 + SLOTS * (MAX_LEN // PAGE_SIZE) // 2)
     layer = c.layer_cfg(dim, attn, c.ffn_cfg(dim * 2))
     decoder = c.decoder_cfg(vocab_size=vocab, dim=dim,

@@ -83,7 +83,6 @@ def attention_cfg(
         sliding_window=sliding_window,
         logit_softcap=logit_softcap,
         query_scale=query_scale,
-        impl="blockwise",
     )
     if head_dim is not None:
         cfg.set(head_dim=head_dim)

@@ -21,8 +21,9 @@ state pytrees. Supports:
 All jitted callables are built once and cached on the engine, so repeated
 ``generate``/``serve`` calls hit the jit trace cache instead of recompiling.
 TTFT/TPOT benchmarks (paper Table 4) run on this engine; the decode-step
-attention kernel is selected by ``MultiheadAttention.Config.decode_impl``
-("ref" | "flash_decode") — a config knob, not a code change (§4.2).
+attention kernel is resolved by the kernel registry from each layer's
+``KernelConfig`` (op ``attention.decode``: Pallas flash-decode where capable,
+ref otherwise) — a config knob, not a code change (§4.2).
 
 The paged serving subsystem (``repro.serving``: page allocator, chunked
 prefill scheduler, streaming gateway) layers on this engine's builders;

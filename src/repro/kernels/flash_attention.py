@@ -23,7 +23,7 @@ blocks from (q, k, lse) instead of materializing the (S, T) matrix —
 
 Both passes are GQA- and sliding-window-aware and validated against
 ``jax.grad`` of ``repro.kernels.ref.reference_attention`` in interpret mode
-(CPU), so ``impl="flash"`` is legal under ``jax.grad`` on every backend.
+(CPU), so the flash path is legal under ``jax.grad`` on every platform.
 """
 
 from __future__ import annotations

@@ -25,7 +25,7 @@ Design points:
 
 Forward only — decode is inference-only by construction. The kernel expects
 a single-device or replicated KV cache: with sequence-sharded caches, use
-the reference decode path (``decode_impl="ref"``), which constrains the
+the reference decode path (backend ``"ref"``), which constrains the
 logits sharding so GSPMD keeps the flash-decoding layout; shard_map
 plumbing for this kernel is future work.
 

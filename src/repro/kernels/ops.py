@@ -1,30 +1,29 @@
-"""Jit'd dispatch wrappers for the Pallas kernels.
+"""Thin dispatchers over the kernel registry.
 
 The layer library calls these; backend selection (real TPU kernel vs
-interpret-mode validation on CPU vs pure-XLA fallback) is a *config* choice
-threaded from mesh rules (paper §4.2), never a code change.
+interpret-mode validation vs pure-XLA fallback) is resolved per call site by
+``repro.kernels.registry`` from one :class:`KernelConfig` — a *config*
+choice threaded from mesh rules (paper §4.2), never a code change.
+
+Each dispatcher only (a) derives the call's :class:`KernelFeatures` from its
+arguments (the old ``_same_positions`` / 1-token / paged fallback branches
+are now capability predicates in the registry) and (b) invokes the resolved
+spec. Resolution is memoized, so the hot-path overhead is one dict lookup.
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref as _ref
-from repro.kernels.flash_attention import (
-    flash_attention as _flash_attention_vjp,
-)
-from repro.kernels.flash_decode import (
-    flash_decode_forward,
-    paged_flash_decode_forward,
-)
-from repro.kernels.rmsnorm import rmsnorm_forward
+from repro.kernels import registry
+from repro.kernels.registry import (DEFAULT_CONFIG, KernelConfig,
+                                    KernelFeatures)
 
 __all__ = ["flash_attention", "decode_attention", "paged_gather_kv",
-           "rmsnorm", "wkv6"]
+           "rmsnorm", "wkv6", "wkv6_decode"]
 
 
 def _same_positions(q_positions, k_positions) -> bool:
@@ -33,7 +32,7 @@ def _same_positions(q_positions, k_positions) -> bool:
 
     Checks by *value* for concrete arrays — callers frequently pass
     equal-but-distinct position arrays (e.g. two ``jnp.arange(S)`` calls),
-    which the old identity-only check silently sent down the
+    which an identity-only check would silently send down the
     O(S*T)-materializing reference path. Traced (abstract) values can't be
     value-compared, so they fall back to the identity check.
     """
@@ -69,28 +68,30 @@ def flash_attention(
     sliding_window: Optional[int] = None,
     logit_softcap: Optional[float] = None,
     scale: Optional[float] = None,
-    block_q: int = 128,
-    block_k: int = 128,
-    interpret: bool = False,
+    kernel: Optional[KernelConfig] = None,
+    needs_grad: bool = False,
 ) -> jax.Array:
-    """Flash attention for contiguous self-attention (q/k share positions).
+    """Full-sequence attention (``attention.fwd``).
 
-    Differentiable: the Pallas kernel carries a recompute-based custom_vjp
-    (dKV + dQ passes), so this is legal under ``jax.grad`` and serves as the
-    training kernel, not just the serving/prefill path.
-
-    Decode steps (ragged cache positions) fall back to the reference path —
-    a 1-token query is GEMV-bound, not a flash-kernel shape.
+    The Pallas kernel carries a recompute-based custom_vjp, so it is legal
+    under ``jax.grad`` and serves as the training kernel. Ragged-position or
+    1-token calls resolve to blockwise/ref via capability predicates.
     """
-    if not _same_positions(q_positions, k_positions) or q.shape[1] == 1:
-        return _ref.reference_attention(
-            q, k, v, q_positions=q_positions, k_positions=k_positions,
-            causal=causal, sliding_window=sliding_window,
-            logit_softcap=logit_softcap, scale=scale)
-    return _flash_attention_vjp(
-        q, k, v, causal=causal, sliding_window=sliding_window,
+    kernel = kernel if kernel is not None else DEFAULT_CONFIG
+    feats = KernelFeatures(
+        platform=registry.current_platform(),
+        dtype=str(q.dtype),
+        needs_grad=needs_grad,
+        ragged_positions=not _same_positions(q_positions, k_positions),
+        single_query=q.shape[1] == 1,
+        sliding_window=sliding_window is not None,
+    )
+    spec = registry.resolve_backend("attention.fwd", feats, kernel)
+    return spec.fn(
+        q, k, v, q_positions=q_positions, k_positions=k_positions,
+        causal=causal, sliding_window=sliding_window,
         logit_softcap=logit_softcap, scale=scale,
-        block_q=block_q, block_k=block_k, interpret=interpret)
+        cfg=kernel)
 
 
 def paged_gather_kv(k_pool: jax.Array, v_pool: jax.Array,
@@ -122,20 +123,22 @@ def decode_attention(
     sliding_window: Optional[int] = None,
     logit_softcap: Optional[float] = None,
     scale: Optional[float] = None,
-    block_k: int = 256,
-    interpret: bool = False,
+    replicated_cache: bool = True,
+    logits_shard_fn=None,
+    kernel: Optional[KernelConfig] = None,
 ) -> jax.Array:
-    """Flash-decode: split-KV online-softmax over a (ring-buffer) cache.
+    """Decode-step attention over a (ring-buffer or paged) cache
+    (``attention.decode``).
 
-    Unlike :func:`flash_attention` this never materializes the
-    ``(B, Hkv, G, S', T)`` logits tensor — the decode TPOT hot path streams
-    the cache through VMEM once per KV group. Masking reads the cache's
-    ``pos`` tensor directly, so sliding-window/ring layouts need no gather.
+    The Pallas backend streams the cache through VMEM once per KV group and
+    never materializes the ``(B, Hkv, G, S', T)`` logits tensor; with
+    ``page_tables`` it DMAs exactly the pages named by each sequence's table
+    row (scalar prefetch). The ref backend materializes logits (optionally
+    constrained by ``logits_shard_fn`` for sequence-sharded caches) and
+    gathers paged pools in XLA.
 
-    With ``page_tables``, ``k``/``v`` are shared physical page *pools* and
-    ``k_positions`` is the per-page position pool: the kernel DMAs exactly
-    the pages named by each sequence's table row (scalar prefetch), so the
-    pool is never gathered in HBM.
+    ``replicated_cache=False`` declares a mesh-sharded KV cache; capability
+    predicates then reject the Pallas backend (no shard_map plumbing yet).
     """
     # Decode positions are never inferable (queries continue an absolute
     # position stream; cache slots hold arbitrary ring positions) — a
@@ -143,31 +146,62 @@ def decode_attention(
     if q_positions is None or k_positions is None:
         raise ValueError("decode_attention requires explicit q_positions "
                          "and k_positions (cache pos tensor)")
-    if page_tables is not None:
-        return paged_flash_decode_forward(
-            q, k, v, k_positions, page_tables, q_positions, causal=causal,
-            sliding_window=sliding_window, logit_softcap=logit_softcap,
-            scale=scale, interpret=interpret)
-    # flash_decode_forward broadcasts (S',)/(1,S')/(B,S') position shapes.
-    return flash_decode_forward(
-        q, k, v, q_positions, k_positions, causal=causal,
+    kernel = kernel if kernel is not None else DEFAULT_CONFIG
+    feats = KernelFeatures(
+        platform=registry.current_platform(),
+        dtype=str(q.dtype),
+        paged=page_tables is not None,
+        sliding_window=sliding_window is not None,
+        replicated_cache=replicated_cache,
+    )
+    spec = registry.resolve_backend("attention.decode", feats, kernel)
+    return spec.fn(
+        q, k, v, q_positions=q_positions, k_positions=k_positions,
+        page_tables=page_tables, causal=causal,
         sliding_window=sliding_window, logit_softcap=logit_softcap,
-        scale=scale, block_k=block_k, interpret=interpret)
+        scale=scale, logits_shard_fn=logits_shard_fn,
+        cfg=kernel)
 
 
 def rmsnorm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6,
-            block_rows: int = 256, interpret: bool = False) -> jax.Array:
-    return rmsnorm_forward(x, scale, eps=eps, block_rows=block_rows,
-                           interpret=interpret)
+            kernel: Optional[KernelConfig] = None,
+            needs_grad: bool = False) -> jax.Array:
+    """RMS normalization (``rmsnorm``). The Pallas kernel is forward-only;
+    training resolves to the (autodiffable) ref path via predicates."""
+    kernel = kernel if kernel is not None else DEFAULT_CONFIG
+    feats = KernelFeatures(
+        platform=registry.current_platform(),
+        dtype=str(x.dtype),
+        needs_grad=needs_grad,
+    )
+    spec = registry.resolve_backend("rmsnorm", feats, kernel)
+    return spec.fn(x, scale, eps=eps,
+                   cfg=kernel)
 
 
-def wkv6(r, k, v, w, u, state=None, *, chunk_size: int = 64,
-         interpret: bool = False):
-    """WKV6 core. Pallas chunked kernel when available; ref otherwise."""
-    try:
-        from repro.kernels.wkv6 import wkv6_forward
+def wkv6_decode(r, k, v, w, u, state, *,
+                kernel: Optional[KernelConfig] = None):
+    """O(1) recurrent WKV6 step (``wkv6.decode``): one token against the
+    carried (B, H, K, V) state."""
+    kernel = kernel if kernel is not None else DEFAULT_CONFIG
+    feats = KernelFeatures(platform=registry.current_platform(),
+                           dtype=str(r.dtype))
+    spec = registry.resolve_backend("wkv6.decode", feats, kernel)
+    return spec.fn(r, k, v, w, u, state,
+                   cfg=kernel)
 
-        return wkv6_forward(r, k, v, w, u, state, chunk_size=chunk_size,
-                            interpret=interpret)
-    except ImportError:
-        return _ref.reference_wkv6(r, k, v, w, u, state, chunk_size=chunk_size)
+
+def wkv6(r, k, v, w, u, state=None, *,
+         kernel: Optional[KernelConfig] = None, needs_grad: bool = False):
+    """WKV6 core (``wkv6``). Pallas chunked kernel where available and
+    eligible (forward-only); chunked-jnp ref otherwise — availability is
+    decided at registry import time with the reason surfaced in errors."""
+    kernel = kernel if kernel is not None else DEFAULT_CONFIG
+    feats = KernelFeatures(
+        platform=registry.current_platform(),
+        dtype=str(r.dtype),
+        needs_grad=needs_grad,
+    )
+    spec = registry.resolve_backend("wkv6", feats, kernel)
+    return spec.fn(r, k, v, w, u, state,
+                   cfg=kernel)

@@ -20,9 +20,9 @@ from repro.core.config import config_for_function
 from repro.trainer import optimizers as opt_lib
 from repro.layers.base import bf16_policy
 from repro.trainer.mesh_rules import (
-    AttentionImplModifier,
     DtypePolicyModifier,
     GradAccumModifier,
+    KernelModifier,
     MeshShapeModifier,
     RematPolicyModifier,
     Zero1Modifier,
@@ -34,14 +34,20 @@ from repro.checkpoint.checkpointer import Checkpointer
 # Paper App. A-style mesh rules: instance type -> config modifiers. The TPU
 # rule is the whole production mixed-precision training recipe — bf16
 # compute with fp32 masters, ZeRO-1 optimizer sharding, differentiable
-# Pallas flash attention as the training kernel — in ~10 lines of config,
-# zero model-code changes (§4.2).
+# Pallas flash attention as the training kernel plus a per-hardware tiling
+# table — in ~10 lines of config, zero model-code changes (§4.2). Kernel
+# choices rewrite the one KernelConfig every kernel-calling layer shares;
+# anything left on "auto" resolves per-platform via the kernel registry's
+# capability predicates. Rules are anchored fullmatch: list specific
+# instance types before broad families.
 MESH_RULES = [
     ("tpu-v5e-.*", [
         MeshShapeModifier.default_config().set(
             mesh_shape=(16, 16), mesh_axis_names=("data", "model")),
         RematPolicyModifier.default_config().set(policy="full"),
-        AttentionImplModifier.default_config().set(impl="flash"),
+        KernelModifier.default_config().set(
+            op_overrides={"attention.fwd": "pallas"},
+            update={"block_q": 256, "block_k": 512}),  # v5e tiling table
         DtypePolicyModifier.default_config().set(policy=bf16_policy()),
         Zero1Modifier.default_config(),
     ]),
@@ -49,7 +55,8 @@ MESH_RULES = [
         MeshShapeModifier.default_config().set(
             mesh_shape=(1,), mesh_axis_names=("data",)),
         RematPolicyModifier.default_config().set(policy=None),
-        AttentionImplModifier.default_config().set(impl="ref"),
+        KernelModifier.default_config().set(
+            op_overrides={"attention.fwd": "ref"}),
     ]),
 ]
 

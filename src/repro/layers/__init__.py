@@ -1,7 +1,8 @@
 """Layer library: strictly-encapsulated, config-composed building blocks."""
 
 from repro.layers.attention import MultiheadAttention
-from repro.layers.base import BaseLayer, DtypePolicy, ParameterSpec, bf16_policy
+from repro.layers.base import (BaseLayer, DtypePolicy, KernelConfig,
+                               ParameterSpec, bf16_policy)
 from repro.layers.basic import Dropout, Embedding, LayerNorm, Linear, RMSNorm
 from repro.layers.causal_lm import CausalLM, MaskedLM, cross_entropy
 from repro.layers.ffn import FeedForward, scaled_hidden_dim

@@ -25,9 +25,9 @@ import jax.numpy as jnp
 from repro.core.config import REQUIRED, Required, config_class, maybe_set
 from repro.core.module import no_context
 from repro.core.utils import PartitionSpecLike, remat_name
-from repro.kernels import ref as kernel_ref
 from repro.core.config import ConfigBase
-from repro.layers.base import BaseLayer, fan_in_init
+from repro.kernels import ops as kernel_ops
+from repro.layers.base import BaseLayer, KernelConfig, fan_in_init
 from repro.layers.basic import Linear
 from repro.layers.rope import BaseRotaryEmbedding, RotaryEmbedding
 
@@ -53,18 +53,15 @@ class MultiheadAttention(BaseLayer):
         logit_softcap: Optional[float] = None
         # None -> 1/sqrt(head_dim); gemma2 overrides (query_pre_attn_scalar).
         query_scale: Optional[float] = None
-        # "ref" | "blockwise" | "flash" (Pallas). Mesh rules select per target.
-        impl: str = "blockwise"
-        # Decode-step attention: "ref" (materializes (B,Hkv,G,S',T) logits,
-        # portable) | "flash_decode" (Pallas split-KV online-softmax over the
-        # ring cache — never materializes decode logits). Config choice, not
-        # code change (paper §4.2); pairs with kernel_interpret off-TPU.
-        # NOTE: "flash_decode" assumes a single-device or replicated KV
-        # cache; for sequence-sharded caches keep "ref", whose
-        # logits_shard_fn keeps GSPMD in the partial-softmax layout
-        # (shard_map plumbing for the kernel is future work).
-        decode_impl: str = "ref"
-        decode_block_k: int = 256
+        # Kernel selection + tiling for attention.fwd / attention.decode:
+        # resolved per call by the kernel registry (capability predicates
+        # pick Pallas flash / blockwise / ref per platform and feature set).
+        # Mesh rules rewrite this tree-wide via KernelModifier (paper §4.2).
+        # NOTE: the Pallas decode kernel assumes a replicated KV cache; the
+        # layer reports sequence-sharded caches as a feature, so "auto"
+        # resolves them to "ref" (whose logits_shard_fn keeps GSPMD in the
+        # partial-softmax layout) and explicit "pallas" rejects with reason.
+        kernel: KernelConfig = KernelConfig()
         # KV cache layout: "dense" (per-slot (B, T, Hkv, D) ring buffer) |
         # "paged" (shared pool of fixed-size pages + per-sequence page
         # tables, vLLM-style). Paged allocates KV on demand instead of
@@ -85,10 +82,6 @@ class MultiheadAttention(BaseLayer):
         # owns the tables — that undercommit is where the >= 2x concurrency
         # at equal KV memory comes from.
         num_pages: Optional[int] = None
-        blockwise_chunk_size: int = 512
-        blockwise_unroll: bool = False
-        # Pallas kernel runs interpreted off-TPU (config, not code: §4.2).
-        kernel_interpret: bool = False
         # Named-axis shardings.
         qkv_weight_partition: PartitionSpecLike = ("data", "model")
         out_weight_partition: PartitionSpecLike = ("model", "data")
@@ -160,16 +153,22 @@ class MultiheadAttention(BaseLayer):
             k = self.rope.apply(k, positions)
         return q, k, v
 
-    def _check_flash_decode_cache_unsharded(self):
-        """flash_decode has no shard_map plumbing yet: a sharded KV cache
-        would silently all-gather per decode step. Fail at trace time with
-        guidance instead (config-level diagnostic, paper §4.2 spirit)."""
+    def _kv_cache_replicated(self) -> bool:
+        """Whether the KV cache is unsharded/replicated on the active mesh.
+
+        Reported to the registry as a capability feature: the Pallas decode
+        kernel has no shard_map plumbing yet, so a sharded cache would
+        silently all-gather per decode step. "auto" resolves sharded caches
+        to the ref path (whose logits_shard_fn keeps GSPMD in the
+        partial-softmax layout); an explicit Pallas request fails resolution
+        with this reason listed.
+        """
         from repro.core.utils import current_mesh, resolve_spec
 
         cfg = self.config
         mesh = current_mesh()
         if mesh is None or cfg.kv_cache_partition is None:
-            return
+            return True
         spec = resolve_spec(cfg.kv_cache_partition, mesh)
 
         def size(entry):
@@ -180,12 +179,7 @@ class MultiheadAttention(BaseLayer):
                     n *= mesh.shape[name]
             return n
 
-        if any(size(e) > 1 for e in tuple(spec)):
-            raise ValueError(
-                f"decode_impl='flash_decode' requires an unsharded/replicated "
-                f"KV cache, but kv_cache_partition={cfg.kv_cache_partition!r} "
-                f"resolves to {spec} on mesh {dict(mesh.shape)}. Use "
-                f"decode_impl='ref' for sequence-sharded caches.")
+        return not any(size(e) > 1 for e in tuple(spec))
 
     def _attend(self, q, k, v, *, q_positions, k_positions, decode=False,
                 page_tables=None):
@@ -199,46 +193,20 @@ class MultiheadAttention(BaseLayer):
             scale=cfg.query_scale,
         )
         if decode:
-            if cfg.decode_impl == "flash_decode":
-                from repro.kernels import ops as kernel_ops
-
-                self._check_flash_decode_cache_unsharded()
-                return kernel_ops.decode_attention(
-                    q, k, v, page_tables=page_tables,
-                    block_k=cfg.decode_block_k,
-                    interpret=cfg.kernel_interpret, **kwargs)
-            if cfg.decode_impl != "ref":
-                raise ValueError(f"Unknown decode impl {cfg.decode_impl!r}")
-            if page_tables is not None:
-                # Portable paged path: materialize this batch's pages with an
-                # XLA gather, then run the reference oracle.
-                from repro.kernels import ops as kernel_ops
-
-                k, v, kpos = kernel_ops.paged_gather_kv(
-                    k, v, k_positions, page_tables)
-                kwargs["k_positions"] = kpos
-                return kernel_ref.reference_attention(
-                    q, k.astype(q.dtype), v.astype(q.dtype), **kwargs)
-            if cfg.kv_cache_partition is not None:
+            logits_shard_fn = None
+            if page_tables is None and cfg.kv_cache_partition is not None:
                 kv_spec = tuple(cfg.kv_cache_partition)
                 # logits (B, Hkv, G, S', T): batch + cache-seq axes from config.
                 spec = (kv_spec[0], None, None, None, kv_spec[1])
-                kwargs["logits_shard_fn"] = lambda l: self._shard(l, spec)
-            return kernel_ref.reference_attention(q, k, v, **kwargs)
-        if cfg.impl == "flash":
-            from repro.kernels import ops as kernel_ops
-
-            out = kernel_ops.flash_attention(
-                q, k, v, interpret=cfg.kernel_interpret, **kwargs)
-        elif cfg.impl == "blockwise":
-            out = kernel_ref.blockwise_attention(
-                q, k, v, chunk_size=cfg.blockwise_chunk_size,
-                unroll=cfg.blockwise_unroll, **kwargs)
-        elif cfg.impl == "ref":
-            out = kernel_ref.reference_attention(q, k, v, **kwargs)
-        else:
-            raise ValueError(f"Unknown attention impl {cfg.impl!r}")
-        return out
+                logits_shard_fn = lambda l: self._shard(l, spec)  # noqa: E731
+            return kernel_ops.decode_attention(
+                q, k, v, page_tables=page_tables,
+                replicated_cache=self._kv_cache_replicated(),
+                logits_shard_fn=logits_shard_fn,
+                kernel=self.kernel_config, **kwargs)
+        return kernel_ops.flash_attention(
+            q, k, v, kernel=self.kernel_config, needs_grad=self.is_training,
+            **kwargs)
 
     # --------------------------------------------------------------- forward
 

@@ -14,6 +14,11 @@ accumulation dtypes. Setting bf16-compute/fp32-master training for an entire
 model is therefore one ``visit_config`` pass over the trainer config
 (``trainer.mesh_rules.DtypePolicyModifier``), never a layer edit — the
 paper's ~10-LoC cross-cutting-change mechanism (§4.2) applied to precision.
+
+Kernel selection follows the same pattern: kernel-calling layers declare a
+``kernel: KernelConfig`` field and dispatch through ``repro.kernels.ops``
+into the capability-based registry; ``KernelModifier`` rewrites every
+``KernelConfig`` in the tree from one mesh rule (§4.2 applied to kernels).
 """
 
 from __future__ import annotations
@@ -29,11 +34,14 @@ import jax.numpy as jnp
 from repro.core.config import REQUIRED, ConfigBase, Required, config_class
 from repro.core.module import Module
 from repro.core.utils import PartitionSpecLike, maybe_shard
+from repro.kernels.registry import DEFAULT_CONFIG as _DEFAULT_KERNEL_CONFIG
+from repro.kernels.registry import KernelConfig
 
 __all__ = [
     "ParameterSpec",
     "DtypePolicy",
     "bf16_policy",
+    "KernelConfig",
     "BaseLayer",
     "Initializer",
     "constant_init",
@@ -135,6 +143,7 @@ def _stable_hash(name: str) -> int:
     return zlib.crc32(name.encode("utf-8"))
 
 
+
 class BaseLayer(Module):
     """Module with parameters."""
 
@@ -154,6 +163,17 @@ class BaseLayer(Module):
 
     def _create_layer_parameter_specs(self) -> Dict[str, ParameterSpec]:
         return {}
+
+    # --- kernel dispatch ----------------------------------------------------
+
+    @property
+    def kernel_config(self) -> KernelConfig:
+        """The layer's :class:`KernelConfig` (kernel-calling layers declare a
+        ``kernel`` field; others get the registry defaults). All kernel
+        selection goes through this one sub-config — mesh rules rewrite it
+        tree-wide via ``KernelModifier`` (paper §4.2), never layer code."""
+        kcfg = getattr(self.config, "kernel", None)
+        return kcfg if kcfg is not None else _DEFAULT_KERNEL_CONFIG
 
     # --- dtype policy -------------------------------------------------------
 

@@ -9,8 +9,10 @@ import jax.numpy as jnp
 
 from repro.core.config import REQUIRED, Required, config_class
 from repro.core.utils import PartitionSpecLike
+from repro.kernels import ops as kernel_ops
 from repro.layers.base import (
     BaseLayer,
+    KernelConfig,
     ParameterSpec,
     fan_in_init,
     normal_init,
@@ -183,7 +185,7 @@ class LayerNorm(BaseLayer):
 
 
 class RMSNorm(BaseLayer):
-    """RMSNorm, fp32 accumulation; optionally dispatches the Pallas kernel."""
+    """RMSNorm, fp32 accumulation; kernel selection via the registry."""
 
     @config_class
     class Config(BaseLayer.Config):
@@ -191,8 +193,10 @@ class RMSNorm(BaseLayer):
         eps: float = 1e-6
         # "unit_offset": gemma-style (1 + scale) parameterization.
         unit_offset: bool = False
-        # "ref" | "pallas" — kernel selection is a config choice (paper §4.2).
-        impl: str = "ref"
+        # Registry dispatch for the "rmsnorm" op (paper §4.2): "auto" picks
+        # the Pallas row-tiled kernel on TPU inference and the autodiffable
+        # ref path under training (the kernel is forward-only).
+        kernel: KernelConfig = KernelConfig()
 
     def _create_layer_parameter_specs(self):
         cfg = self.config
@@ -205,15 +209,9 @@ class RMSNorm(BaseLayer):
     def forward(self, x: jax.Array) -> jax.Array:
         cfg = self.config
         x = self._to_compute(x)  # fp32 accumulation below is policy-invariant
-        scale = self.state["scale"]
+        scale = self.state["scale"].astype(jnp.float32)
         if cfg.unit_offset:
             scale = scale + 1.0
-        if cfg.impl == "pallas":
-            from repro.kernels import ops as kernel_ops
-
-            return kernel_ops.rmsnorm(x, scale.astype(jnp.float32), eps=cfg.eps)
-        xf = x.astype(jnp.float32)
-        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
-        y = xf * jax.lax.rsqrt(var + cfg.eps)
-        y = y * scale.astype(jnp.float32)
-        return y.astype(x.dtype)
+        return kernel_ops.rmsnorm(x, scale, eps=cfg.eps,
+                                  kernel=self.kernel_config,
+                                  needs_grad=self.is_training)

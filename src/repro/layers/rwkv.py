@@ -20,9 +20,10 @@ import jax.numpy as jnp
 from repro.core.config import REQUIRED, ConfigBase, Required, config_class, maybe_set
 from repro.core.module import no_context
 from repro.core.utils import PartitionSpecLike, remat_name
-from repro.kernels import ref as kref
+from repro.kernels import ops as kernel_ops
 from repro.layers.base import (
     BaseLayer,
+    KernelConfig,
     ParameterSpec,
     fan_in_init,
     normal_init,
@@ -50,11 +51,9 @@ class RWKV6TimeMix(BaseLayer):
         proj_weight_partition: PartitionSpecLike = ("data", "model")
         out_weight_partition: PartitionSpecLike = ("model", "data")
         hidden_partition: PartitionSpecLike = (("pod", "data"), None, "model")
-        wkv_chunk_size: int = 64
-        wkv_unroll: bool = False
-        # "ref" (chunked jnp) | "pallas".
-        impl: str = "ref"
-        kernel_interpret: bool = False
+        # Registry dispatch for the "wkv6" op (paper §4.2); wkv_chunk_size /
+        # wkv_unroll tiling also lives on the shared KernelConfig.
+        kernel: KernelConfig = KernelConfig()
 
     @property
     def _num_heads(self) -> int:
@@ -128,16 +127,9 @@ class RWKV6TimeMix(BaseLayer):
         return yn
 
     def _wkv(self, r, k, v, w, state):
-        cfg = self.config
-        if cfg.impl == "pallas":
-            from repro.kernels import ops as kernel_ops
-
-            return kernel_ops.wkv6(r, k, v, w, self.state["u"], state,
-                                   chunk_size=cfg.wkv_chunk_size,
-                                   interpret=cfg.kernel_interpret)
-        return kref.reference_wkv6(r, k, v, w, self.state["u"], state,
-                                   chunk_size=cfg.wkv_chunk_size,
-                                   unroll=cfg.wkv_unroll)
+        return kernel_ops.wkv6(r, k, v, w, self.state["u"], state,
+                               kernel=self.kernel_config,
+                               needs_grad=self.is_training)
 
     def forward(self, x: jax.Array, positions: Optional[jax.Array] = None) -> jax.Array:
         x = self._to_compute(x)
@@ -189,8 +181,9 @@ class RWKV6TimeMix(BaseLayer):
     def extend_step(self, state, x_step):
         x_step = self._to_compute(x_step)
         r, k, v, w, g = self._projections(x_step, state["shift"])
-        out, wkv_state = kref.reference_wkv6_recurrent(
-            r, k, v, w, self.state["u"], state["wkv"])
+        out, wkv_state = kernel_ops.wkv6_decode(
+            r, k, v, w, self.state["u"], state["wkv"],
+            kernel=self.kernel_config)
         y = self._group_norm(out).astype(x_step.dtype) * g
         y = y @ self.state["out_proj"].astype(x_step.dtype)
         new_state = {"shift": x_step[:, -1:].astype(state["shift"].dtype),

@@ -14,7 +14,7 @@ the (arbitrarily deep) tree.
 from __future__ import annotations
 
 import re
-from typing import Any, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.config import (
     REQUIRED,
@@ -25,15 +25,15 @@ from repro.core.config import (
     visit_config,
 )
 from repro.core.module import Module, no_context
+from repro.kernels.registry import KernelConfig
 
 __all__ = [
     "ConfigModifier",
     "MeshShapeModifier",
     "RematPolicyModifier",
-    "AttentionImplModifier",
+    "KernelModifier",
     "OffloadOptimizerModifier",
     "GradAccumModifier",
-    "KernelBlockModifier",
     "DtypePolicyModifier",
     "Zero1Modifier",
     "apply_mesh_rules",
@@ -75,22 +75,57 @@ class RematPolicyModifier(ConfigModifier):
         return trainer_cfg
 
 
-class AttentionImplModifier(ConfigModifier):
+class KernelModifier(ConfigModifier):
     """Kernel selection is config (paper: cuDNN / NKI / SplashAttention /
-    Pallas per backend)."""
+    Pallas per backend).
+
+    Rewrites every :class:`KernelConfig` anywhere in the trainer tree — one
+    generic modifier replaces the old per-knob AttentionImplModifier +
+    KernelBlockModifier pair, so a new backend or a per-hardware tiling
+    table is a ~10-line mesh rule touching zero model code::
+
+        KernelModifier.default_config().set(
+            backend="auto",
+            op_overrides={"attention.fwd": "pallas"},
+            update={"block_q": 256, "blockwise_chunk_size": 2048})
+    """
 
     @config_class
     class Config(ConfigModifier.Config):
-        impl: str = "blockwise"  # ref | blockwise | flash
-        kernel_interpret: bool = False
+        # Registry backend id ("auto" | "pallas" | "pallas:interpret" |
+        # "blockwise" | "ref"); None leaves each layer's choice untouched.
+        backend: Optional[str] = None
+        # Per-op backend ids, e.g. {"attention.decode": "pallas"}.
+        op_overrides: Optional[Dict[str, str]] = None
+        # Pallas interpret mode (off-TPU kernel validation).
+        interpret: Optional[bool] = None
+        # Any other KernelConfig fields (per-hardware tiling table), e.g.
+        # {"block_q": 512, "decode_block_k": 512}.
+        update: Optional[Dict[str, Any]] = None
 
     @no_context
     def apply(self, trainer_cfg):
         c = self.config
-        update_configs_recursively(
-            trainer_cfg, {"impl": c.impl, "kernel_interpret": c.kernel_interpret},
-            where=lambda path, cfg: ("impl" in cfg.keys()
-                                     and "kernel_interpret" in cfg.keys()))
+        updates: Dict[str, Any] = dict(c.update or {})
+        if c.backend is not None:
+            updates["backend"] = c.backend
+        if c.op_overrides is not None:
+            updates["op_overrides"] = dict(c.op_overrides)
+        if c.interpret is not None:
+            updates["interpret"] = c.interpret
+        unknown = [k for k in updates if k not in KernelConfig().keys()]
+        if unknown:
+            raise ValueError(
+                f"KernelModifier.update has non-KernelConfig fields "
+                f"{unknown}; known: {KernelConfig().keys()}")
+
+        def visit(path, node):
+            if isinstance(node, KernelConfig):
+                # Copy container values per site so sites never alias.
+                node.set(**{k: (dict(v) if isinstance(v, dict) else v)
+                            for k, v in updates.items()})
+
+        visit_config(trainer_cfg, visit)
         return trainer_cfg
 
 
@@ -113,20 +148,6 @@ class GradAccumModifier(ConfigModifier):
     @no_context
     def apply(self, trainer_cfg):
         trainer_cfg.set(grad_accum_steps=self.config.steps)
-        return trainer_cfg
-
-
-class KernelBlockModifier(ConfigModifier):
-    """Tunes attention blockwise chunk size (per-target tiling)."""
-
-    @config_class
-    class Config(ConfigModifier.Config):
-        chunk_size: Required[int] = REQUIRED
-
-    @no_context
-    def apply(self, trainer_cfg):
-        update_configs_recursively(
-            trainer_cfg, {"blockwise_chunk_size": self.config.chunk_size})
         return trainer_cfg
 
 
@@ -176,9 +197,16 @@ MeshRules = Sequence[Tuple[str, Sequence[ConfigBase]]]
 
 def apply_mesh_rules(trainer_cfg: ConfigBase, *, instance_type: str,
                      rules: MeshRules) -> ConfigBase:
-    """Applies the first rule whose regex matches ``instance_type``."""
+    """Applies the first rule whose regex FULLY matches ``instance_type``.
+
+    Anchored to ``re.fullmatch`` only: the old ``fullmatch(...) or
+    match(...)`` made every rule a prefix match, so a broad rule listed
+    first (e.g. ``"tpu-.*"``) shadowed more specific ones (``"tpu-v5e-.*"``)
+    AND patterns like ``"tpu-v5e"`` silently matched ``"tpu-v5e-256"``.
+    Write explicit ``.*`` suffixes for prefix semantics.
+    """
     for pattern, modifier_cfgs in rules:
-        if re.fullmatch(pattern, instance_type) or re.match(pattern, instance_type):
+        if re.fullmatch(pattern, instance_type):
             for mc in modifier_cfgs:
                 modifier = mc.instantiate()
                 trainer_cfg = modifier.apply(trainer_cfg)

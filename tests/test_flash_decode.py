@@ -14,6 +14,11 @@ import pytest
 from repro.core.module import functional
 from repro.inference.engine import InferenceEngine, Request
 from repro.kernels import ops, ref
+from repro.kernels.registry import KernelConfig
+
+# interpret=True -> the registry auto-selects pallas:interpret (the exact
+# Mosaic block decomposition, executed on CPU).
+INTERP = KernelConfig().set(interpret=True)
 from repro.layers import CausalLM, Decoder, Repeat, TransformerLayer
 
 
@@ -27,7 +32,7 @@ def _mk_qkv(key, B, Sq, T, Hq, Hkv, D, dtype=jnp.float32):
 
 def _check_parity(q, k, v, q_pos, k_pos, **kw):
     out = ops.decode_attention(
-        q, k, v, q_positions=q_pos, k_positions=k_pos, interpret=True, **kw)
+        q, k, v, q_positions=q_pos, k_positions=k_pos, kernel=INTERP, **kw)
     expect = ref.reference_attention(
         q, k, v, q_positions=q_pos, k_positions=k_pos, **kw)
     np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
@@ -94,7 +99,7 @@ def test_flash_decode_partial_and_empty_slots():
     k_pos = jnp.stack([valid, jnp.full((T,), -1)])  # row 1: empty slot
     q_pos = jnp.asarray([[4], [0]])
     out = ops.decode_attention(q, k, v, q_positions=q_pos, k_positions=k_pos,
-                               interpret=True)
+                               kernel=INTERP)
     expect = ref.reference_attention(q, k, v, q_positions=q_pos,
                                      k_positions=k_pos)
     # Row 0 has valid keys: exact parity with the reference oracle.
@@ -112,7 +117,7 @@ def test_flash_decode_bf16_inputs():
     k_pos = jnp.broadcast_to(jnp.arange(T), (B, T))
     q_pos = jnp.full((B, 1), T)
     out = ops.decode_attention(q, k, v, q_positions=q_pos, k_positions=k_pos,
-                               interpret=True)
+                               kernel=INTERP)
     expect = ref.reference_attention(q, k, v, q_positions=q_pos,
                                      k_positions=k_pos)
     assert out.dtype == jnp.bfloat16
@@ -135,11 +140,11 @@ def test_flash_attention_equal_positions_uses_kernel():
     assert qp is not kp
     jaxpr = jax.make_jaxpr(
         lambda q, k, v: ops.flash_attention(
-            q, k, v, q_positions=qp, k_positions=kp, interpret=True))(q, k, v)
+            q, k, v, q_positions=qp, k_positions=kp, kernel=INTERP))(q, k, v)
     assert "pallas_call" in str(jaxpr), \
         "equal-but-distinct positions fell back to the reference path"
     out = ops.flash_attention(q, k, v, q_positions=qp, k_positions=kp,
-                              interpret=True)
+                              kernel=INTERP)
     expect = ref.reference_attention(q, k, v)
     np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=2e-5)
 
@@ -147,12 +152,13 @@ def test_flash_attention_equal_positions_uses_kernel():
 # --------------------------- engine: scan generate ---------------------------
 
 
-def _tiny_lm(vocab=48, dim=32, L=2, window=None, decode_impl="ref"):
+def _tiny_lm(vocab=48, dim=32, L=2, window=None, decode_backend="ref"):
     layer = TransformerLayer.default_config().set(input_dim=dim)
-    layer.self_attention.set(num_heads=4, num_kv_heads=2, impl="ref",
-                             kv_cache_dtype=jnp.float32, sliding_window=window,
-                             decode_impl=decode_impl,
-                             kernel_interpret=(decode_impl == "flash_decode"))
+    kernel = KernelConfig().set(
+        op_overrides={"attention.decode": decode_backend},
+        interpret=(decode_backend == "pallas"))
+    layer.self_attention.set(num_heads=4, num_kv_heads=2, kernel=kernel,
+                             kv_cache_dtype=jnp.float32, sliding_window=window)
     layer.feed_forward.set(hidden_dim=dim * 2)
     return CausalLM.default_config().set(
         name="lm",
@@ -212,9 +218,9 @@ def test_scan_generate_matches_stepwise_temperature():
 
 
 def test_generate_flash_decode_matches_ref_impl():
-    """decode_impl is semantics-free: flash_decode (interpret) == ref."""
-    engine_ref, _ = _engine(_tiny_lm(decode_impl="ref"))
-    engine_fd, _ = _engine(_tiny_lm(decode_impl="flash_decode"))
+    """The decode backend is semantics-free: pallas (interpret) == ref."""
+    engine_ref, _ = _engine(_tiny_lm(decode_backend="ref"))
+    engine_fd, _ = _engine(_tiny_lm(decode_backend="pallas"))
     prompts = np.asarray(jax.random.randint(jax.random.PRNGKey(3), (2, 8), 0, 48))
     t_ref, _ = engine_ref.generate(prompts, max_new_tokens=6)
     t_fd, _ = engine_fd.generate(prompts, max_new_tokens=6)
@@ -222,8 +228,9 @@ def test_generate_flash_decode_matches_ref_impl():
 
 
 def test_generate_flash_decode_sliding_window_matches_ref():
-    engine_ref, _ = _engine(_tiny_lm(window=8, decode_impl="ref"), max_len=64)
-    engine_fd, _ = _engine(_tiny_lm(window=8, decode_impl="flash_decode"),
+    engine_ref, _ = _engine(_tiny_lm(window=8, decode_backend="ref"),
+                            max_len=64)
+    engine_fd, _ = _engine(_tiny_lm(window=8, decode_backend="pallas"),
                            max_len=64)
     prompts = np.asarray(jax.random.randint(jax.random.PRNGKey(4), (2, 16), 0, 48))
     t_ref, _ = engine_ref.generate(prompts, max_new_tokens=6)
@@ -250,13 +257,13 @@ def _jaxpr_shapes(jaxpr, acc):
 
 
 def test_flash_decode_never_materializes_decode_logits():
-    """The acceptance guarantee: with decode_impl='flash_decode' no
+    """The acceptance guarantee: with the pallas decode backend no
     intermediate of shape (B, Hkv, G, S', T) exists anywhere in the decode
     step program; with 'ref' it does."""
     B, T = 2, 32
     shapes = {}
-    for impl in ("ref", "flash_decode"):
-        engine, params = _engine(_tiny_lm(decode_impl=impl), max_len=T)
+    for impl in ("ref", "pallas"):
+        engine, params = _engine(_tiny_lm(decode_backend=impl), max_len=T)
         cache = engine.init_cache(B)
         step = engine.serve_step_fn()
         ids = jnp.zeros((B, 1), jnp.int32)
@@ -265,7 +272,7 @@ def test_flash_decode_never_materializes_decode_logits():
     logits_shape = (B, 2, 2, 1, T)  # (B, Hkv, G, S'=1, T)
     assert logits_shape in shapes["ref"], \
         "expected the ref decode path to materialize attention logits"
-    assert logits_shape not in shapes["flash_decode"], \
+    assert logits_shape not in shapes["pallas"], \
         "flash_decode materialized the (B,Hkv,G,S',T) logits tensor"
 
 
@@ -319,7 +326,8 @@ def test_serve_mixed_lengths_rwkv():
     from repro.layers.rwkv import RWKV6Block
 
     block = RWKV6Block.default_config().set(input_dim=32)
-    block.time_mix.set(head_dim=16, decay_lora_dim=8, wkv_chunk_size=4)
+    block.time_mix.set(head_dim=16, decay_lora_dim=8)
+    block.time_mix.kernel.set(wkv_chunk_size=4)
     block.channel_mix.set(hidden_dim=64)
     model = CausalLM.default_config().set(
         name="lm",
@@ -370,7 +378,7 @@ def test_decode_attention_requires_positions():
     q, k, v = _mk_qkv(jax.random.PRNGKey(8), 1, 1, 8, 2, 2, 8)
     with pytest.raises(ValueError, match="explicit q_positions"):
         ops.decode_attention(q, k, v, q_positions=None,
-                             k_positions=jnp.arange(8), interpret=True)
+                             k_positions=jnp.arange(8), kernel=INTERP)
 
 
 def test_flash_decode_allows_single_device_mesh():
@@ -378,7 +386,7 @@ def test_flash_decode_allows_single_device_mesh():
     1-device mesh (names resolve but sizes are 1) must pass."""
     from repro.core.utils import make_mesh, set_mesh
 
-    engine, _ = _engine(_tiny_lm(decode_impl="flash_decode"))
+    engine, _ = _engine(_tiny_lm(decode_backend="pallas"))
     prompts = np.asarray(jax.random.randint(jax.random.PRNGKey(9), (2, 8), 0, 48))
     with set_mesh(make_mesh((1,), ("data",))):
         tokens, _ = engine.generate(prompts, max_new_tokens=3)

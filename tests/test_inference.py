@@ -12,7 +12,7 @@ from repro.layers import CausalLM, Decoder, Repeat, TransformerLayer
 
 def _tiny_lm(vocab=48, dim=32, L=2, window=None):
     layer = TransformerLayer.default_config().set(input_dim=dim)
-    layer.self_attention.set(num_heads=4, num_kv_heads=2, impl="ref",
+    layer.self_attention.set(num_heads=4, num_kv_heads=2, 
                              kv_cache_dtype=jnp.float32, sliding_window=window)
     layer.feed_forward.set(hidden_dim=dim * 2)
     return CausalLM.default_config().set(
@@ -102,7 +102,8 @@ def test_rwkv_engine_generation():
     from repro.layers.rwkv import RWKV6Block
 
     block = RWKV6Block.default_config().set(input_dim=32)
-    block.time_mix.set(head_dim=16, decay_lora_dim=8, wkv_chunk_size=4)
+    block.time_mix.set(head_dim=16, decay_lora_dim=8)
+    block.time_mix.kernel.set(wkv_chunk_size=4)
     block.channel_mix.set(hidden_dim=64)
     model = CausalLM.default_config().set(
         name="lm",

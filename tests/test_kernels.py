@@ -15,6 +15,7 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.kernels import ops, ref
+from repro.kernels.registry import KernelConfig
 from repro.kernels.flash_attention import flash_attention, flash_attention_forward
 from repro.kernels.rmsnorm import rmsnorm_forward
 
@@ -96,8 +97,8 @@ def test_flash_property_sweep(B, S, heads, D, causal):
 # ------------------------ flash attention backward ---------------------------
 #
 # The recompute-based custom_vjp (dKV + dQ Pallas passes) must match
-# jax.grad of the reference oracle — this is what makes impl="flash" legal
-# as the *training* kernel, not just the serving path.
+# jax.grad of the reference oracle — this is what makes the pallas backend
+# legal as the *training* kernel, not just the serving path.
 
 
 def _grad_parity(B, S, Hq, Hkv, D, *, causal=True, window=None, cap=None,
@@ -140,7 +141,7 @@ def test_flash_backward_ragged_padding():
 
 
 def test_flash_value_and_grad_under_jit():
-    """impl='flash' composes with jit + value_and_grad (the train step)."""
+    """The flash kernel composes with jit + value_and_grad (the train step)."""
     q, k, v = _mk_qkv(jax.random.PRNGKey(5), 1, 128, 128, 2, 2, 32)
 
     @jax.jit
@@ -154,13 +155,13 @@ def test_flash_value_and_grad_under_jit():
 
 
 def test_attention_layer_flash_grads_match_ref_impl():
-    """End-to-end layer gradients: impl='flash' == impl='ref' under grad."""
+    """End-to-end layer gradients: pallas backend == ref backend under grad."""
     from repro.core.module import functional
     from repro.layers import MultiheadAttention
 
     cfg = MultiheadAttention.default_config().set(
         name="a", input_dim=64, num_heads=4, num_kv_heads=2,
-        impl="flash", kernel_interpret=True)
+        kernel=KernelConfig().set(backend="pallas", interpret=True))
     layer = cfg.instantiate()
     state = layer.initialize_parameters_recursively(jax.random.PRNGKey(0))
     x = jax.random.normal(jax.random.PRNGKey(9), (2, 128, 64))
@@ -170,7 +171,8 @@ def test_attention_layer_flash_grads_match_ref_impl():
         return jnp.sum(out ** 2)
 
     g_flash = jax.grad(loss)(state, layer)
-    g_ref = jax.grad(loss)(state, cfg.clone(impl="ref").instantiate())
+    g_ref = jax.grad(loss)(
+        state, cfg.clone(kernel=KernelConfig().set(backend="ref")).instantiate())
     for a, b in zip(jax.tree.leaves(g_flash), jax.tree.leaves(g_ref)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    atol=2e-4, rtol=2e-4)
@@ -215,25 +217,26 @@ def test_ops_dispatch_decode_falls_back():
     qp = jnp.array([10])
     kp = jnp.arange(16)
     out = ops.flash_attention(q, k, v, q_positions=qp, k_positions=kp,
-                              causal=True, interpret=True)
+                              causal=True,
+                              kernel=KernelConfig().set(interpret=True))
     expect = ref.reference_attention(q, k, v, q_positions=qp, k_positions=kp,
                                      causal=True)
     np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=1e-5)
 
 
 def test_attention_layer_flash_impl_matches_ref_impl():
-    """End-to-end through the layer: impl='flash' (interpret) == impl='ref'."""
+    """End-to-end through the layer: pallas (interpret) == ref backend."""
     from repro.core.module import functional
     from repro.layers import MultiheadAttention
 
     cfg = MultiheadAttention.default_config().set(
         name="a", input_dim=64, num_heads=4, num_kv_heads=2,
-        impl="flash", kernel_interpret=True)
+        kernel=KernelConfig().set(backend="pallas", interpret=True))
     layer = cfg.instantiate()
     state = layer.initialize_parameters_recursively(jax.random.PRNGKey(0))
     x = jax.random.normal(jax.random.PRNGKey(9), (2, 128, 64))
     out_flash, _ = functional(layer, state=state, inputs=(x,))
-    cfg2 = cfg.clone(impl="ref")
+    cfg2 = cfg.clone(kernel=KernelConfig().set(backend="ref"))
     layer2 = cfg2.instantiate()
     out_ref, _ = functional(layer2, state=state, inputs=(x,))
     np.testing.assert_allclose(np.asarray(out_flash), np.asarray(out_ref),
@@ -289,7 +292,9 @@ def test_wkv6_ragged_falls_back_to_ref():
 
     B, T, H, K, V = 1, 30, 1, 8, 8  # T not divisible by chunk
     r, k, v, w, u = _mk_wkv(jax.random.PRNGKey(13), B, T, H, K, V)
-    out, s = ops.wkv6(r, k, v, w, u, chunk_size=8, interpret=True)
+    out, s = ops.wkv6(r, k, v, w, u,
+                      kernel=KernelConfig().set(wkv_chunk_size=8,
+                                                interpret=True))
     expect, _ = ref.reference_wkv6_recurrent(r, k, v, w, u)
     np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
                                rtol=2e-4, atol=2e-4)

@@ -7,6 +7,7 @@ import pytest
 
 from repro.core.module import functional
 from repro.kernels import ref as kref
+from repro.kernels.registry import KernelConfig
 from repro.layers import (
     CausalLM,
     Decoder,
@@ -98,10 +99,12 @@ ATTN_VARIANTS = [
 @pytest.mark.parametrize("variant", ATTN_VARIANTS)
 def test_attention_blockwise_equals_ref(variant):
     cfg = MultiheadAttention.default_config().set(
-        name="a", input_dim=32, qkv_bias=True, impl="ref", **variant)
+        name="a", input_dim=32, qkv_bias=True,
+        kernel=KernelConfig().set(backend="ref"), **variant)
     x = jax.random.normal(jax.random.PRNGKey(5), (2, 16, 32))
     layer, state, out_ref, _ = run(cfg, (x,))
-    cfg2 = cfg.clone(impl="blockwise", blockwise_chunk_size=4)
+    cfg2 = cfg.clone(kernel=KernelConfig().set(
+        backend="blockwise", blockwise_chunk_size=4))
     _, _, out_blk, _ = run(cfg2, (x,), state=state)
     np.testing.assert_allclose(np.asarray(out_ref), np.asarray(out_blk), atol=1e-5)
 
@@ -112,7 +115,7 @@ def test_attention_decode_matches_forward(variant):
     train/inference, paper §6)."""
     S, D = 12, 32
     cfg = MultiheadAttention.default_config().set(
-        name="a", input_dim=D, impl="ref", kv_cache_dtype=jnp.float32, **variant)
+        name="a", input_dim=D, kv_cache_dtype=jnp.float32, **variant)
     x = jax.random.normal(jax.random.PRNGKey(6), (2, S, D))
     layer, state, full, _ = run(cfg, (x,))
 
@@ -144,7 +147,7 @@ def test_sliding_window_cache_is_bounded():
 
 def _tiny_layer_cfg(dim=32, moe=False):
     cfg = TransformerLayer.default_config().set(name="t", input_dim=dim)
-    cfg.self_attention.set(num_heads=4, num_kv_heads=2, impl="ref")
+    cfg.self_attention.set(num_heads=4, num_kv_heads=2)
     cfg.feed_forward.set(hidden_dim=dim * 2, activation=("linear", "nn.silu"))
     return cfg
 

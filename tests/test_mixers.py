@@ -194,7 +194,8 @@ def test_wkv6_chunked_with_initial_state():
 
 def test_rwkv_block_decode_matches_forward():
     cfg = RWKV6Block.default_config().set(name="b", input_dim=32)
-    cfg.time_mix.set(head_dim=16, decay_lora_dim=8, wkv_chunk_size=4)
+    cfg.time_mix.set(head_dim=16, decay_lora_dim=8)
+    cfg.time_mix.kernel.set(wkv_chunk_size=4)
     cfg.channel_mix.set(hidden_dim=64)
     layer = cfg.instantiate()
     state = layer.initialize_parameters_recursively(jax.random.PRNGKey(0))
@@ -221,7 +222,7 @@ def test_moe_drop_in_replacement_via_replace_config():
     from repro.layers import FeedForward, Repeat, TransformerLayer
 
     layer_cfg = TransformerLayer.default_config().set(name="t", input_dim=32)
-    layer_cfg.self_attention.set(num_heads=4, impl="ref")
+    layer_cfg.self_attention.set(num_heads=4)
     layer_cfg.feed_forward.set(hidden_dim=64)
     stack = Repeat.default_config().set(
         name="s", layer=layer_cfg, num_layers=2, remat_policy=None)

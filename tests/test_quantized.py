@@ -55,7 +55,7 @@ def _tiny_trainer_cfg():
     from repro.trainer.trainer import SpmdTrainer
 
     layer = TransformerLayer.default_config().set(input_dim=32)
-    layer.self_attention.set(num_heads=4, impl="ref")
+    layer.self_attention.set(num_heads=4)
     layer.feed_forward.set(hidden_dim=64)
     model = CausalLM.default_config().set(
         decoder=Decoder.default_config().set(
@@ -91,7 +91,7 @@ def test_fp8_kv_cache_decode_close_to_bf16():
     from repro.layers import MultiheadAttention
 
     cfg = MultiheadAttention.default_config().set(
-        name="a", input_dim=64, num_heads=4, num_kv_heads=2, impl="ref",
+        name="a", input_dim=64, num_heads=4, num_kv_heads=2,
         kv_cache_dtype=jnp.float32)
     layer = cfg.instantiate()
     state = layer.initialize_parameters_recursively(jax.random.PRNGKey(0))

@@ -11,6 +11,7 @@ import pytest
 from repro.inference.engine import InferenceEngine, Request
 from repro.kernels import ops, ref
 from repro.layers import CausalLM, Decoder, Repeat, TransformerLayer
+from repro.kernels.registry import KernelConfig
 from repro.serving import (
     BlockAllocator,
     SamplingParams,
@@ -20,14 +21,17 @@ from repro.serving import (
 )
 
 
-def _tiny_lm(layout="dense", num_pages=None, page=8, decode_impl="ref",
+def _tiny_lm(layout="dense", num_pages=None, page=8, decode_backend="ref",
              vocab=48, dim=32):
     layer = TransformerLayer.default_config().set(input_dim=dim)
-    layer.self_attention.set(num_heads=4, num_kv_heads=2, impl="ref",
+    # "pallas" runs interpreted on CPU via the registry (pallas:interpret).
+    kernel = KernelConfig().set(
+        op_overrides={"attention.decode": decode_backend},
+        interpret=(decode_backend == "pallas"))
+    layer.self_attention.set(num_heads=4, num_kv_heads=2, kernel=kernel,
                              kv_cache_dtype=jnp.float32,
                              kv_cache_layout=layout, page_size=page,
-                             num_pages=num_pages, decode_impl=decode_impl,
-                             kernel_interpret=(decode_impl == "flash_decode"))
+                             num_pages=num_pages)
     layer.feed_forward.set(hidden_dim=dim * 2)
     return CausalLM.default_config().set(
         name="lm",
@@ -120,7 +124,7 @@ def test_paged_flash_decode_matches_gathered_reference(Sq):
                          [4 + i for i in range(Sq)]], jnp.int32)
     out = ops.decode_attention(q, k_pool, v_pool, q_positions=q_pos,
                                k_positions=pos_pool, page_tables=tbl,
-                               interpret=True)
+                               kernel=KernelConfig().set(interpret=True))
     kg, vg, kposg = ops.paged_gather_kv(k_pool, v_pool, pos_pool, tbl)
     expect = ref.reference_attention(q, kg, vg, q_positions=q_pos,
                                      k_positions=kposg)
@@ -137,7 +141,7 @@ def test_paged_flash_decode_fully_unmapped_sequence_is_finite():
     out = ops.decode_attention(q, k_pool, v_pool,
                                q_positions=jnp.asarray([[13], [0]]),
                                k_positions=pos_pool, page_tables=tbl,
-                               interpret=True)
+                               kernel=KernelConfig().set(interpret=True))
     assert np.isfinite(np.asarray(out)).all()
     np.testing.assert_allclose(np.asarray(out[1]), 0.0, atol=1e-6)
 
@@ -145,13 +149,13 @@ def test_paged_flash_decode_fully_unmapped_sequence_is_finite():
 # --------------------------- paged layer / engine ----------------------------
 
 
-@pytest.mark.parametrize("decode_impl", ["ref", "flash_decode"])
-def test_paged_generate_matches_dense(decode_impl):
+@pytest.mark.parametrize("decode_backend", ["ref", "pallas"])
+def test_paged_generate_matches_dense(decode_backend):
     """kv_cache_layout is semantics-free: full-residency paged generation
     (identity page tables) == dense generation, for both decode impls."""
     prompts = np.asarray(jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 48))
     t_dense, _ = _engine(_tiny_lm()).generate(prompts, max_new_tokens=6)
-    t_paged, _ = _engine(_tiny_lm("paged", decode_impl=decode_impl)).generate(
+    t_paged, _ = _engine(_tiny_lm("paged", decode_backend=decode_backend)).generate(
         prompts, max_new_tokens=6)
     np.testing.assert_array_equal(t_dense, t_paged)
 
@@ -270,7 +274,8 @@ def test_chunked_prefill_recurrent_mixer_matches_generate():
     from repro.layers.rwkv import RWKV6Block
 
     block = RWKV6Block.default_config().set(input_dim=32)
-    block.time_mix.set(head_dim=16, decay_lora_dim=8, wkv_chunk_size=4)
+    block.time_mix.set(head_dim=16, decay_lora_dim=8)
+    block.time_mix.kernel.set(wkv_chunk_size=4)
     block.channel_mix.set(hidden_dim=64)
     model = CausalLM.default_config().set(
         name="lm",

@@ -23,11 +23,11 @@ from repro.layers import (
     bf16_policy,
 )
 from repro.trainer import optimizers as opt_lib
+from repro.kernels.registry import KernelConfig
 from repro.trainer.mesh_rules import (
-    AttentionImplModifier,
     DtypePolicyModifier,
     GradAccumModifier,
-    KernelBlockModifier,
+    KernelModifier,
     MeshShapeModifier,
     OffloadOptimizerModifier,
     RematPolicyModifier,
@@ -40,7 +40,7 @@ from repro.trainer.trainer import SpmdTrainer, WatchdogTimeout, _Watchdog
 def _tiny_trainer_cfg(tmpdir=None, vocab=32, dim=32, L=2, steps=30,
                       batch=8, seq=16):
     layer = TransformerLayer.default_config().set(input_dim=dim)
-    layer.self_attention.set(num_heads=4, num_kv_heads=2, impl="ref")
+    layer.self_attention.set(num_heads=4, num_kv_heads=2)
     layer.feed_forward.set(hidden_dim=dim * 2)
     model = CausalLM.default_config().set(
         decoder=Decoder.default_config().set(
@@ -130,34 +130,43 @@ def test_mesh_rules_apply_per_target():
             MeshShapeModifier.default_config().set(
                 mesh_shape=(16, 16), mesh_axis_names=("data", "model")),
             RematPolicyModifier.default_config().set(policy="full"),
-            AttentionImplModifier.default_config().set(impl="flash"),
+            KernelModifier.default_config().set(
+                op_overrides={"attention.fwd": "pallas"}),
         ]),
         ("cpu-.*", [
             MeshShapeModifier.default_config().set(
                 mesh_shape=(1,), mesh_axis_names=("data",)),
-            AttentionImplModifier.default_config().set(
-                impl="ref", kernel_interpret=True),
+            KernelModifier.default_config().set(backend="ref",
+                                                interpret=True),
             GradAccumModifier.default_config().set(steps=4),
         ]),
     ]
     tpu_cfg = apply_mesh_rules(cfg.clone(), instance_type="tpu-v5e-256-4", rules=rules)
     assert tpu_cfg.mesh_shape == (16, 16)
-    assert tpu_cfg.model.decoder.stack.layer.self_attention.impl == "flash"
+    attn_kernel = tpu_cfg.model.decoder.stack.layer.self_attention.kernel
+    assert attn_kernel.op_overrides == {"attention.fwd": "pallas"}
     assert tpu_cfg.model.decoder.stack.remat_policy == "full"
+    # The one KernelModifier reaches EVERY KernelConfig in the tree, not
+    # just attention (rmsnorm/wkv6-calling layers included).
+    norm_kernel = tpu_cfg.model.decoder.stack.layer.norm.kernel
+    assert norm_kernel.op_overrides == {"attention.fwd": "pallas"}
 
     cpu_cfg = apply_mesh_rules(cfg.clone(), instance_type="cpu-local", rules=rules)
     assert cpu_cfg.mesh_shape == (1,)
     assert cpu_cfg.grad_accum_steps == 4
-    assert cpu_cfg.model.decoder.stack.layer.self_attention.impl == "ref"
+    attn_kernel = cpu_cfg.model.decoder.stack.layer.self_attention.kernel
+    assert attn_kernel.backend == "ref" and attn_kernel.interpret is True
 
 
 def test_mesh_rules_modifiers_offload_kernelblock_zero1():
-    """Satellite coverage: the remaining one-knob modifiers."""
+    """Satellite coverage: the remaining one-knob modifiers + the generic
+    KernelModifier tiling table."""
     cfg = _tiny_trainer_cfg(steps=1)
     rules = [
         ("tpu-.*", [
             OffloadOptimizerModifier.default_config().set(enabled=True),
-            KernelBlockModifier.default_config().set(chunk_size=256),
+            KernelModifier.default_config().set(
+                update={"blockwise_chunk_size": 256, "block_q": 512}),
             Zero1Modifier.default_config(),
             GradAccumModifier.default_config().set(steps=2),
         ]),
@@ -167,10 +176,34 @@ def test_mesh_rules_modifiers_offload_kernelblock_zero1():
     assert out.opt_state_sharding == "zero1"
     assert out.grad_accum_steps == 2
     attn = out.model.decoder.stack.layer.self_attention
-    assert attn.blockwise_chunk_size == 256
+    assert attn.kernel.blockwise_chunk_size == 256
+    assert attn.kernel.block_q == 512
     # Non-matching instance types leave the config untouched.
     same = apply_mesh_rules(cfg.clone(), instance_type="gpu-H100", rules=rules)
     assert same.opt_state_sharding == "params"
+    # Unknown tiling keys fail loudly instead of silently no-opping.
+    bad = [("tpu-.*", [KernelModifier.default_config().set(
+        update={"blockwzse_chunk": 1})])]
+    with pytest.raises(ValueError, match="non-KernelConfig fields"):
+        apply_mesh_rules(cfg.clone(), instance_type="tpu-v5e-16", rules=bad)
+
+
+def test_mesh_rules_fullmatch_not_prefix():
+    """Regression (satellite): rules are anchored fullmatch. The old
+    ``fullmatch(...) or match(...)`` made every rule a prefix match, so a
+    broad rule listed first (e.g. "tpu-.*") shadowed "tpu-v5e-.*" AND a
+    non-.* pattern like "tpu-v5e" matched "tpu-v5e-256"."""
+    cfg = _tiny_trainer_cfg(steps=1)
+    rules = [
+        # A pattern without .* must NOT prefix-match longer instance types.
+        ("tpu-v5e", [GradAccumModifier.default_config().set(steps=8)]),
+        ("tpu-v5e-.*", [GradAccumModifier.default_config().set(steps=2)]),
+    ]
+    out = apply_mesh_rules(cfg.clone(), instance_type="tpu-v5e-256", rules=rules)
+    assert out.grad_accum_steps == 2, \
+        "bare 'tpu-v5e' prefix-matched 'tpu-v5e-256'"
+    exact = apply_mesh_rules(cfg.clone(), instance_type="tpu-v5e", rules=rules)
+    assert exact.grad_accum_steps == 8
 
 
 def test_dtype_policy_modifier_reaches_every_layer():
@@ -343,7 +376,7 @@ ZERO1_SUBPROCESS = textwrap.dedent("""
 
     def make(zero1):
         layer = TransformerLayer.default_config().set(input_dim=32)
-        layer.self_attention.set(num_heads=4, num_kv_heads=2, impl="ref")
+        layer.self_attention.set(num_heads=4, num_kv_heads=2)
         layer.feed_forward.set(hidden_dim=64)
         model = CausalLM.default_config().set(
             decoder=Decoder.default_config().set(
@@ -388,7 +421,7 @@ ZERO1_SUBPROCESS = textwrap.dedent("""
     # weight partitions must not produce duplicate-axis PartitionSpecs.
     cfg = make(True)
     layer = TransformerLayer.default_config().set(input_dim=32)
-    layer.self_attention.set(num_heads=4, num_kv_heads=2, impl="ref")
+    layer.self_attention.set(num_heads=4, num_kv_heads=2)
     layer.feed_forward.set(hidden_dim=64)
     cfg.model = CausalLM.default_config().set(
         name="model",
