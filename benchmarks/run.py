@@ -4,6 +4,8 @@
   bench_kernels    — kernel registry: per-op per-backend parity vs ref +
                      memoized dispatch overhead (<1µs budget)
   bench_train      — Table 3 (training step time / roofline bounds)
+  bench_checkpoint — §5–§6: save/restore latency, training-thread stall per
+                     async save, goodput under injected preemptions
   bench_inference  — Table 4 + Fig 5 (TTFT / TPOT / throughput / cont. batching)
   bench_serving    — serving load: Poisson arrivals through the paged
                      gateway (p50/p99 TTFT/TPOT, tokens/s, preemptions)
@@ -21,6 +23,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import (
+        bench_checkpoint,
         bench_inference,
         bench_kernels,
         bench_loc,
@@ -30,8 +33,8 @@ def main() -> None:
     )
 
     print("name,us_per_call,derived")
-    for mod in (bench_loc, bench_kernels, bench_train, bench_inference,
-                bench_serving, bench_scaling):
+    for mod in (bench_loc, bench_kernels, bench_train, bench_checkpoint,
+                bench_inference, bench_serving, bench_scaling):
         try:
             rows = mod.run()
         except Exception as e:  # noqa: BLE001

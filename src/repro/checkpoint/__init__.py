@@ -1,1 +1,1 @@
-from repro.checkpoint.checkpointer import Checkpointer
+from repro.checkpoint.checkpointer import Checkpointer, CheckpointWriteError

@@ -1,17 +1,30 @@
-"""Checkpointer: data-sharded serialization, async saves, GC (paper §5).
+"""Checkpointer v2: data-sharded, async, fault-tolerant serialization (§5).
 
 Paper-faithful properties, adapted to a single-host test substrate:
 
 * **Data-sharded serialization** — leaves are partitioned across processes by
-  a deterministic assignment (rather than "rank 0 writes everything"), with
-  ``concurrency`` bounding in-flight host copies.
-* **Async saves** — a background thread serializes while training continues;
-  ``wait()`` blocks only on a prior in-flight save (as in §5).
-* **GC policy** — keep-last-N, background-collected.
-* **Storage-layer swap** — the directory layout + index live behind a small
-  interface, so a cloud backend is a drop-in config change (we ship local-FS).
+  a deterministic assignment (rather than "rank 0 writes everything").
+* **Async saves with off-thread staging** — ``save()`` takes a cheap
+  device-side snapshot (safe against the trainer donating the live buffers
+  into the next step) and returns; device→host staging AND the file write
+  happen in a background thread, with at most ``concurrency`` leaves staged
+  concurrently. The training thread stalls only for the snapshot plus any
+  still-in-flight previous save.
+* **Error propagation** — a failure in the background write re-raises from
+  ``wait()`` and from the next ``save()``; it is never swallowed by a daemon
+  thread.
+* **Commit barrier** — ``COMMITTED`` is written by process 0 only after
+  *every* process's shard file exists (shards are written atomically via
+  tmp+rename, so existence implies completeness). Readers only ever see
+  fully-committed steps.
+* **Checkpoint tiers** — besides the durable directory tier, the newest
+  staged state is retained in host memory; ``emergency_save()`` flushes it
+  (or a freshly passed state) synchronously — the preemption-signal path.
+* **Aux state** — small JSON-serializable per-process state (e.g. the input
+  iterator's cursor) rides along with each step so restore is exactly-once
+  w.r.t. data.
 
-Format: <dir>/step_<k>/shard_<p>.npz + index.json (paths, shapes, dtypes).
+Format: <dir>/step_<k>/shard_<p>.npz + aux_<p>.json + index.json.
 """
 
 from __future__ import annotations
@@ -21,7 +34,8 @@ import os
 import shutil
 import threading
 import time
-from typing import Any, Dict, List, Optional
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,9 +43,12 @@ import numpy as np
 
 from repro.core.config import REQUIRED, Required, config_class
 from repro.core.module import Module, no_context
-from repro.core.utils import flatten_tree
 
-__all__ = ["Checkpointer"]
+__all__ = ["Checkpointer", "CheckpointWriteError"]
+
+
+class CheckpointWriteError(RuntimeError):
+    """An async checkpoint write failed; raised from ``wait()``/``save()``."""
 
 
 class Checkpointer(Module):
@@ -40,15 +57,35 @@ class Checkpointer(Module):
         directory: Required[str] = REQUIRED
         keep_last_n: int = 3
         async_save: bool = True
-        # Max leaves concurrently staged to host memory (paper: bounding
-        # in-flight shards protects host RAM against slow backends).
+        # Max leaves concurrently staged device->host (bounds peak host RAM
+        # against slow backends; enforced by the staging thread pool).
         concurrency: int = 16
         process_index: int = 0
         process_count: int = 1
+        # How long process 0 waits for the other processes' shards before
+        # declaring the commit barrier failed.
+        commit_timeout_s: float = 60.0
+        # Barrier budget for emergency (preemption) saves: must fit inside
+        # the scheduler's grace window — a peer that died before writing its
+        # shard must not stall process 0 into a SIGKILL.
+        emergency_commit_timeout_s: float = 5.0
+        # Keep the newest staged state in host memory as a last-resort tier
+        # (flushed by emergency_save() on preemption).
+        memory_tier: bool = True
 
     def __init__(self, cfg, *, parent=None):
         super().__init__(cfg, parent=parent)
         self._save_thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        self._aborted = False
+        # Newest staged state: (step, staged_flat, all_keys, aux).
+        self._memory: Optional[Tuple[int, Dict[str, np.ndarray], List[str],
+                                     Optional[dict]]] = None
+        self._memory_lock = threading.Lock()
+        # Long-lived staging pool (lazy): its worker count IS the bound on
+        # concurrent device->host transfers; workers exit when the
+        # checkpointer is GC'd or the interpreter shuts down.
+        self._stage_pool: Optional[ThreadPoolExecutor] = None
 
     # ------------------------------------------------------------------ save
 
@@ -58,50 +95,221 @@ class Checkpointer(Module):
         leaves = jax.tree_util.tree_flatten_with_path(state)[0]
         return {jax.tree_util.keystr(path): leaf for path, leaf in leaves}
 
-    @no_context
-    def save(self, step: int, state: Any):
-        self.wait()
+    def _snapshot(self, leaf: Any) -> Any:
+        """Device-side copy decoupling the checkpoint from buffer donation:
+        the trainer donates the live state into the next step, so the
+        background thread must never read the original buffers."""
+        if isinstance(leaf, jax.Array):
+            return leaf.copy()
+        return np.array(leaf, copy=True)
+
+    def _to_host(self, leaf: Any) -> np.ndarray:
+        """Device->host transfer of one leaf (runs on a staging worker)."""
+        return np.asarray(leaf)
+
+    def _stage(self, snap: Dict[str, Any]) -> Dict[str, np.ndarray]:
+        """Stages all leaves to host with at most ``concurrency`` transfers
+        in flight (bounded by the pool's worker count — unlike the old
+        per-iteration ``with sem:`` which never had two acquires alive)."""
+        if self._stage_pool is None:
+            self._stage_pool = ThreadPoolExecutor(
+                max_workers=max(self.config.concurrency, 1),
+                thread_name_prefix="ckpt-stage")
+        hosted = self._stage_pool.map(self._to_host, snap.values())
+        return dict(zip(snap.keys(), hosted))
+
+    def _shard_and_snapshot(self, state: Any):
+        """(this process's leaves, snapshotted; all leaf keys) — the ONE
+        sharding rule both save paths must share: leaf i -> process
+        (i % process_count)."""
         cfg = self.config
         flat = self._flatten(state)
-        # Data-sharded assignment: leaf i -> process (i % process_count).
-        mine = {k: v for i, (k, v) in enumerate(sorted(flat.items()))
+        snap = {k: self._snapshot(v)
+                for i, (k, v) in enumerate(sorted(flat.items()))
                 if i % cfg.process_count == cfg.process_index}
-        staged: Dict[str, np.ndarray] = {}
-        sem = threading.Semaphore(cfg.concurrency)
-        for k, v in mine.items():
-            with sem:
-                staged[k] = np.asarray(v)
+        return snap, sorted(flat.keys())
+
+    def _raise_pending_error(self):
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise CheckpointWriteError(
+                f"async checkpoint write failed: {err!r}") from err
+
+    @no_context
+    def save(self, step: int, state: Any, *, aux: Optional[dict] = None):
+        """Checkpoints ``state`` (any pytree of arrays) as ``step``.
+
+        Async mode returns after a device-side snapshot; staging + write
+        happen in the background. A failure of the *previous* async save
+        raises here (and from ``wait()``) — errors are never silent.
+        """
+        if self._aborted:
+            # 'Errors are never silent': an aborted (dead-process) instance
+            # must not accept saves it would silently drop.
+            raise CheckpointWriteError(
+                "save() on an abort()-ed checkpointer; it simulates a dead "
+                "process and can never commit")
+        self.wait()  # bound in-flight saves to one; surfaces prior errors
+        cfg = self.config
+        snap, all_keys = self._shard_and_snapshot(state)
 
         def _write():
-            step_dir = os.path.join(cfg.directory, f"step_{step:08d}")
-            os.makedirs(step_dir, exist_ok=True)
-            shard_path = os.path.join(step_dir, f"shard_{cfg.process_index}.npz")
-            np.savez(shard_path, **{k.replace("/", "|"): v for k, v in staged.items()})
-            if cfg.process_index == 0:
-                index = {
-                    "step": step,
-                    "keys": sorted(flat.keys()),
-                    "process_count": cfg.process_count,
-                    "created": time.time(),
-                }
-                with open(os.path.join(step_dir, "index.json"), "w") as f:
-                    json.dump(index, f)
-                # Commit marker makes partially-written checkpoints invisible.
-                with open(os.path.join(step_dir, "COMMITTED"), "w") as f:
-                    f.write("ok")
-            self._gc()
+            try:
+                staged = self._stage(snap)
+                if cfg.memory_tier:
+                    with self._memory_lock:
+                        self._memory = (step, staged, all_keys, aux)
+                self._write_step(step, staged, all_keys, aux)
+                self._gc()
+            except BaseException as e:  # noqa: BLE001 — re-raised at wait()
+                self._error = e
 
         if cfg.async_save:
-            self._save_thread = threading.Thread(target=_write, daemon=True)
+            self._save_thread = threading.Thread(
+                target=_write, daemon=True, name=f"ckpt-save-{step}")
             self._save_thread.start()
         else:
             _write()
+            self._raise_pending_error()
+
+    def _write_step(self, step: int, staged: Dict[str, np.ndarray],
+                    all_keys: List[str], aux: Optional[dict],
+                    commit_timeout_s: Optional[float] = None):
+        """Writes this process's shard (+aux), then commits (process 0)."""
+        cfg = self.config
+        step_dir = os.path.join(cfg.directory, f"step_{step:08d}")
+        os.makedirs(step_dir, exist_ok=True)
+        if self._aborted:
+            return
+        shard_path = os.path.join(step_dir, f"shard_{cfg.process_index}.npz")
+        # Atomic write: a shard file that EXISTS is complete, which is what
+        # lets the commit barrier treat existence as the per-process signal.
+        # (.npz suffix so np.savez doesn't append one of its own.)
+        tmp_path = shard_path + ".tmp.npz"
+        np.savez(tmp_path,
+                 **{k.replace("/", "|"): v for k, v in staged.items()})
+        os.replace(tmp_path, shard_path)
+        if aux is not None:
+            aux_path = os.path.join(step_dir, f"aux_{cfg.process_index}.json")
+            with open(aux_path + ".tmp", "w") as f:
+                json.dump(aux, f)
+            os.replace(aux_path + ".tmp", aux_path)
+        if cfg.process_index == 0:
+            self._commit(step, step_dir, all_keys,
+                         timeout_s=commit_timeout_s)
+
+    def _commit(self, step: int, step_dir: str, all_keys: List[str],
+                timeout_s: Optional[float] = None):
+        """Commit barrier: COMMITTED appears only after ALL shards exist.
+
+        The old code committed right after process 0's own shard, making a
+        checkpoint visible while other processes were still writing — a
+        restore could then fail (or worse, silently read a stale shard left
+        over from GC races).
+        """
+        cfg = self.config
+        timeout_s = cfg.commit_timeout_s if timeout_s is None else timeout_s
+        deadline = time.monotonic() + timeout_s
+        wanted = [os.path.join(step_dir, f"shard_{p}.npz")
+                  for p in range(cfg.process_count)]
+        while not all(os.path.exists(p) for p in wanted):
+            if self._aborted:
+                return
+            if time.monotonic() > deadline:
+                missing = [p for p in wanted if not os.path.exists(p)]
+                raise CheckpointWriteError(
+                    f"commit barrier timed out after {timeout_s}s "
+                    f"at step {step}: missing shards {missing}")
+            time.sleep(0.02)
+        if self._aborted:
+            return
+        index = {
+            "step": step,
+            "keys": all_keys,
+            "process_count": cfg.process_count,
+            "created": time.time(),
+        }
+        index_path = os.path.join(step_dir, "index.json")
+        with open(index_path + ".tmp", "w") as f:
+            json.dump(index, f)
+        os.replace(index_path + ".tmp", index_path)
+        # Commit marker makes partially-written checkpoints invisible.
+        with open(os.path.join(step_dir, "COMMITTED"), "w") as f:
+            f.write("ok")
 
     @no_context
     def wait(self):
+        """Blocks on the in-flight async save; re-raises its error, if any."""
         if self._save_thread is not None:
             self._save_thread.join()
             self._save_thread = None
+        self._raise_pending_error()
+
+    @no_context
+    def abort(self):
+        """Simulates process death: the in-flight write must never commit.
+        (Used by the supervisor's kill-during-async-save injection; a real
+        SIGKILL gives the same observable outcome because shard writes are
+        atomic and COMMITTED is written last.)
+
+        Joins the write thread before returning so callers can read
+        ``latest_step()`` without racing a still-live committer, and shuts
+        the staging pool down (the instance is dead)."""
+        self._aborted = True
+        if (self._save_thread is not None
+                and self._save_thread is not threading.current_thread()):
+            self._save_thread.join()
+            self._save_thread = None
+        self._error = None  # a dead process reports nothing
+        if self._stage_pool is not None:
+            self._stage_pool.shutdown(wait=False)
+            self._stage_pool = None
+
+    # ----------------------------------------------------------- emergency
+
+    @no_context
+    def emergency_save(self, step: Optional[int] = None, state: Any = None,
+                       *, aux: Optional[dict] = None) -> Optional[int]:
+        """Synchronous last-resort save for the preemption path (§5).
+
+        With ``state``: stage + write + commit NOW, bypassing the async
+        machinery. Without: flush the in-memory tier (the newest staged
+        state) to disk if it is not already committed. Returns the step
+        committed, or None if nothing was written (nothing to flush, or
+        this checkpointer was ``abort()``-ed — a dead process must never
+        claim a commit).
+        """
+        cfg = self.config
+        if self._aborted:
+            return None
+        try:
+            self.wait()
+        except CheckpointWriteError:
+            pass  # best effort: the emergency state supersedes the failure
+        if state is not None:
+            assert step is not None, "emergency_save(state=...) needs step"
+            snap, all_keys = self._shard_and_snapshot(state)
+            self._write_step(step, self._stage(snap), all_keys, aux,
+                             commit_timeout_s=cfg.emergency_commit_timeout_s)
+            self._gc()
+            self._raise_pending_error()
+            return step if self._is_committed(step) else None
+        with self._memory_lock:
+            memory = self._memory
+        if memory is None:
+            return None
+        m_step, staged, all_keys, m_aux = memory
+        if not self._is_committed(m_step):
+            self._write_step(m_step, staged, all_keys, m_aux,
+                             commit_timeout_s=cfg.emergency_commit_timeout_s)
+        return m_step if self._is_committed(m_step) else None
+
+    def _is_committed(self, step: int) -> bool:
+        """Only the COMMITTED marker makes a step resumable: a non-zero
+        process that wrote its shard must not claim a commit that process 0
+        (the committer) may never have made."""
+        return os.path.exists(os.path.join(
+            self.config.directory, f"step_{step:08d}", "COMMITTED"))
 
     # --------------------------------------------------------------- restore
 
@@ -145,8 +353,30 @@ class Checkpointer(Module):
             key = jax.tree_util.keystr(path)
             if key not in flat:
                 raise ValueError(f"Checkpoint step {step} missing leaf {key}")
-            leaves.append(jnp.asarray(flat[key], dtype=ref_leaf.dtype))
+            arr = flat[key]
+            if tuple(arr.shape) != tuple(ref_leaf.shape):
+                raise ValueError(
+                    f"Checkpoint step {step} leaf {key} has shape "
+                    f"{tuple(arr.shape)}, expected {tuple(ref_leaf.shape)} — "
+                    "restoring into a differently-shaped model?")
+            leaves.append(jnp.asarray(arr, dtype=ref_leaf.dtype))
         return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    @no_context
+    def restore_aux(self, step: Optional[int] = None) -> Optional[dict]:
+        """This process's aux state for ``step`` (None if absent — e.g. a
+        checkpoint written before aux existed)."""
+        cfg = self.config
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                return None
+        aux_path = os.path.join(cfg.directory, f"step_{step:08d}",
+                                f"aux_{cfg.process_index}.json")
+        if not os.path.exists(aux_path):
+            return None
+        with open(aux_path) as f:
+            return json.load(f)
 
     # ------------------------------------------------------------------- gc
 

@@ -1,1 +1,6 @@
-from repro.data.input import SyntheticInput
+from repro.data.input import SyntheticInput, SyntheticIterator
+from repro.data.streaming import (
+    PrefetchIterator,
+    StreamingTextInput,
+    StreamingTextIterator,
+)

@@ -16,14 +16,45 @@ overfit tests can actually reduce loss.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Iterator, Optional
+from typing import Dict, Optional
 
 import numpy as np
 
 from repro.core.config import REQUIRED, Required, config_class
 from repro.core.module import Module, no_context
 
-__all__ = ["SyntheticInput"]
+__all__ = ["SyntheticInput", "SyntheticIterator"]
+
+
+class SyntheticIterator:
+    """Resumable batch iterator (explicit-state protocol, paper §5).
+
+    Every input iterator in this repo implements ``state() -> dict`` (small,
+    JSON-serializable) and ``restore(state)``; the trainer checkpoints the
+    state alongside the model so a resume is *exactly-once* w.r.t. data —
+    the old sequential-RNG ``batches()`` replayed from batch 0 after any
+    restore. Batches are keyed by the batch index, so the state is just the
+    cursor.
+    """
+
+    def __init__(self, input_module: "SyntheticInput"):
+        self._input = input_module
+        self._next = 0
+
+    def __iter__(self) -> "SyntheticIterator":
+        return self
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        batch = self._input.make_batch(self._next)
+        self._next += 1
+        return batch
+
+    def state(self) -> dict:
+        """State s.t. ``restore(state)`` makes the next batch this one."""
+        return {"next_batch": self._next}
+
+    def restore(self, state: dict):
+        self._next = int(state["next_batch"])
 
 
 class SyntheticInput(Module):
@@ -48,14 +79,10 @@ class SyntheticInput(Module):
         return cfg.global_batch_size // cfg.process_count
 
     @no_context
-    def batches(self) -> Iterator[Dict[str, np.ndarray]]:
-        cfg = self.config
-        rng = np.random.default_rng(cfg.seed * 1000 + cfg.process_index)
-        B, S, V = self.host_batch_size(), cfg.seq_len, cfg.vocab_size
-        step = 0
-        while True:
-            yield self.make_batch(step, rng)
-            step += 1
+    def batches(self) -> "SyntheticIterator":
+        """A resumable iterator: each batch is generated from its index (not
+        a sequentially-consumed RNG), so `state()`/`restore()` is exact."""
+        return SyntheticIterator(self)
 
     @no_context
     def make_batch(self, step: int, rng: Optional[np.random.Generator] = None

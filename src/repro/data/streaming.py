@@ -1,0 +1,238 @@
+"""Streaming packed-sequence text input with exact resume + prefetch.
+
+Models the production text path (AXLearn §5; Modalities' resumable
+dataloaders): a document stream is packed into fixed-length training rows,
+a background prefetch thread hides input latency behind the training step,
+and the iterator exposes the explicit-state protocol (``state() -> dict`` /
+``restore(state)``) so the trainer can checkpoint the data cursor alongside
+the model — restore is exactly-once, no replayed or skipped tokens.
+
+The document *source* here is synthetic-but-deterministic (document ``d``
+is a pure function of ``d`` and the seed — the same Markov stream the
+trainer overfits on), standing in for a tokenized corpus shard; swapping in
+a real reader only changes ``_document()``.
+
+Packing: documents are concatenated with an EOS separator into a flat token
+buffer; each batch row is a ``seq_len + 1`` window (inputs = ``[:-1]``,
+labels = ``[1:]``); the label at each EOS position is masked (-100) so the
+model is never trained to predict across a document boundary from the
+separator itself. Host-sharding assigns document ``d`` to process
+``d % process_count``.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.config import REQUIRED, Required, config_class
+from repro.core.module import Module, no_context
+
+__all__ = ["StreamingTextInput", "StreamingTextIterator", "PrefetchIterator"]
+
+IGNORE_LABEL = -100
+
+
+class StreamingTextIterator:
+    """Packs the document stream into batches; state = (cursor, buffer)."""
+
+    def __init__(self, input_module: "StreamingTextInput"):
+        self._input = input_module
+        self._next_doc = input_module.config.process_index
+        self._buffer: List[int] = []
+        self._emitted = 0
+
+    def __iter__(self) -> "StreamingTextIterator":
+        return self
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        cfg = self._input.config
+        B = self._input.host_batch_size()
+        S = cfg.seq_len
+        need = B * (S + 1)
+        while len(self._buffer) < need:
+            self._buffer.extend(self._input.document_tokens(self._next_doc))
+            self._buffer.append(cfg.eos_id)
+            self._next_doc += cfg.process_count
+        rows = np.asarray(self._buffer[:need], np.int32).reshape(B, S + 1)
+        del self._buffer[:need]
+        self._emitted += 1
+        ids = rows[:, :-1]
+        labels = rows[:, 1:].copy()
+        labels[ids == cfg.eos_id] = IGNORE_LABEL
+        return {"input_ids": ids, "labels": labels}
+
+    def state(self) -> dict:
+        """JSON-serializable; restore() makes the next batch this iterator's
+        next batch — the leftover packing buffer is part of the cursor."""
+        return {
+            "next_doc": int(self._next_doc),
+            "buffer": [int(t) for t in self._buffer],
+            "emitted": int(self._emitted),
+        }
+
+    def restore(self, state: dict):
+        self._next_doc = int(state["next_doc"])
+        self._buffer = [int(t) for t in state["buffer"]]
+        self._emitted = int(state.get("emitted", 0))
+
+
+class PrefetchIterator:
+    """Background-thread prefetch over any resumable iterator.
+
+    The producer records the inner iterator's state *after* generating each
+    batch and enqueues ``(batch, state)`` pairs, so ``state()`` on the
+    consumer side reflects exactly the batches consumed — prefetched-but-
+    unconsumed batches are never silently skipped by a checkpoint/restore.
+    Producer exceptions re-raise on the consuming (training) thread.
+    """
+
+    _SENTINEL = object()
+
+    def __init__(self, inner: Any, *, depth: int = 2):
+        assert depth >= 1, depth
+        self._inner = inner
+        self._queue: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self._last_state: Optional[dict] = None
+        self._error: Optional[BaseException] = None
+
+    def _produce(self):
+        try:
+            while not self._stop.is_set():
+                batch = next(self._inner)
+                state = self._inner.state()
+                while not self._stop.is_set():
+                    try:
+                        self._queue.put((batch, state), timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+        except BaseException as e:  # noqa: BLE001 — re-raised on consumer
+            self._error = e
+            # Keep trying to deliver the sentinel until it lands (or we are
+            # closed): a full queue must not swallow the error and leave the
+            # consumer blocked forever.
+            while not self._stop.is_set():
+                try:
+                    self._queue.put(self._SENTINEL, timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+
+    def _ensure_started(self):
+        if self._thread is None:
+            self._thread = threading.Thread(
+                target=self._produce, daemon=True, name="input-prefetch")
+            self._thread.start()
+
+    def __iter__(self) -> "PrefetchIterator":
+        return self
+
+    def __next__(self) -> Any:
+        self._ensure_started()
+        while True:
+            try:
+                item = self._queue.get(timeout=1.0)
+                break
+            except queue.Empty:
+                # Liveness check: never block forever on a dead producer.
+                if self._error is not None:
+                    raise self._error
+                if self._thread is not None and not self._thread.is_alive():
+                    raise RuntimeError(
+                        "prefetch producer thread died without an error")
+        if item is self._SENTINEL:
+            raise self._error
+        batch, state = item
+        self._last_state = state
+        return batch
+
+    def state(self) -> dict:
+        """The inner state as of the last *consumed* batch."""
+        if self._last_state is not None:
+            return self._last_state
+        return self._inner.state()
+
+    def restore(self, state: dict):
+        assert self._thread is None, \
+            "restore() must be called before the first batch is consumed"
+        self._inner.restore(state)
+
+    def close(self):
+        """Stops the producer thread (idempotent)."""
+        self._stop.set()
+        if self._thread is not None:
+            # Unblock a producer waiting on a full queue.
+            try:
+                while True:
+                    self._queue.get_nowait()
+            except queue.Empty:
+                pass
+            self._thread.join(timeout=5.0)
+            self._thread = None
+
+
+class StreamingTextInput(Module):
+    @config_class
+    class Config(Module.Config):
+        vocab_size: Required[int] = REQUIRED
+        seq_len: Required[int] = REQUIRED
+        global_batch_size: Required[int] = REQUIRED
+        seed: int = 0
+        eos_id: int = 1
+        # Document lengths are uniform in [min_doc_len, max_doc_len].
+        min_doc_len: int = 8
+        max_doc_len: int = 64
+        # Prefetch-queue depth; 0 disables the background thread.
+        prefetch: int = 2
+        # Data-parallel process sharding (paper: host-sharded input pipeline).
+        process_index: int = 0
+        process_count: int = 1
+
+    @no_context
+    def host_batch_size(self) -> int:
+        cfg = self.config
+        assert cfg.global_batch_size % cfg.process_count == 0
+        return cfg.global_batch_size // cfg.process_count
+
+    @no_context
+    def document_tokens(self, doc: int) -> List[int]:
+        """Document ``doc`` as a token list — a pure function of (seed, doc),
+        so any resume point regenerates identical data. Tokens live in
+        [2, vocab) (0 reserved, 1 = EOS) and follow the same learnable
+        Markov structure as SyntheticInput."""
+        cfg = self.config
+        rng = np.random.default_rng(cfg.seed * 7919 + doc)
+        n = int(rng.integers(cfg.min_doc_len, cfg.max_doc_len + 1))
+        lo, span = 2, max(cfg.vocab_size - 2, 1)
+        noise = rng.integers(0, 7, size=n)
+        toks = np.zeros(n, np.int64)
+        toks[0] = lo + int(rng.integers(0, span))
+        for t in range(1, n):
+            toks[t] = lo + (3 * (toks[t - 1] - lo) + noise[t]) % span
+        return toks.tolist()
+
+    @no_context
+    def batches(self):
+        """A resumable (and, if ``prefetch > 0``, prefetched) iterator."""
+        cfg = self.config
+        it: Any = StreamingTextIterator(self)
+        if cfg.prefetch > 0:
+            it = PrefetchIterator(it, depth=cfg.prefetch)
+        return it
+
+    @no_context
+    def make_batch(self, step: int, rng: Optional[np.random.Generator] = None
+                   ) -> Dict[str, np.ndarray]:
+        """Batch ``step`` of a fresh stream (trainer uses this for the
+        sharding sample; O(step) — fine for step 0/tests)."""
+        it = StreamingTextIterator(self)
+        batch = next(it)
+        for _ in range(step):
+            batch = next(it)
+        return batch

@@ -12,6 +12,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import sys
 
 import jax
 
@@ -30,6 +31,7 @@ from repro.trainer.mesh_rules import (
 )
 from repro.trainer.trainer import SpmdTrainer
 from repro.checkpoint.checkpointer import Checkpointer
+from repro.runtime.signals import Preempted, install_preemption_handler
 
 # Paper App. A-style mesh rules: instance type -> config modifiers. The TPU
 # rule is the whole production mixed-precision training recipe — bf16
@@ -105,15 +107,31 @@ def main():
         seq=args.seq, lr=args.lr, instance_type=args.instance_type,
         checkpoint_dir=args.checkpoint_dir)
     trainer = cfg.instantiate()
-    result = trainer.run()
+    # Preemption wiring (§5): a scheduler SIGTERM sets the event; the loop
+    # commits a synchronous emergency checkpoint at the next step boundary
+    # and raises Preempted — restarting the same command resumes exactly.
+    install_preemption_handler(trainer.preemption_event)
+    try:
+        result = trainer.run()
+    except Preempted as e:
+        print(f"[train] preempted at step {e.step}; "
+              + ("emergency checkpoint committed — rerun to resume"
+                 if e.committed else "no checkpointer configured"))
+        sys.exit(143)  # 128 + SIGTERM, like a default-handled TERM
     print(f"[train] arch={args.arch} params={result['num_params']:,}")
     for row in result["history"]:
         print(f"[train] step={row['step']:>5} loss={row['loss']:.4f} "
               f"acc={row.get('accuracy', 0):.3f} "
               f"steps/s={row['steps_per_s']:.2f}")
+    g = result["goodput"]
+    buckets = " ".join(f"{k}={v:.2f}s"
+                       for k, v in sorted(g["buckets"].items()))
+    print(f"[train] goodput={g['goodput_fraction']:.3f} "
+          f"wall={g['wall_s']:.2f}s {buckets}")
     if args.out:
         with open(args.out, "w") as f:
-            json.dump(result["history"], f, indent=1)
+            json.dump({"history": result["history"],
+                       "goodput": result["goodput"]}, f, indent=1)
 
 
 if __name__ == "__main__":

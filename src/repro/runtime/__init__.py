@@ -1,0 +1,23 @@
+"""Fault-tolerant training runtime (paper §5–§6).
+
+The trainer runs *inside* this layer: goodput attribution
+(:mod:`repro.runtime.goodput`), preemption signaling
+(:mod:`repro.runtime.signals`), and the restart supervisor
+(:mod:`repro.runtime.supervisor`). The supervisor drives trainer *configs*
+(instantiating them per attempt), so nothing here imports the trainer and
+the trainer can import this package freely.
+"""
+
+from repro.runtime.goodput import GoodputMonitor
+from repro.runtime.signals import Preempted, SimulatedCrash, install_preemption_handler
+from repro.runtime.supervisor import Fault, Supervisor, assert_continuity
+
+__all__ = [
+    "Fault",
+    "GoodputMonitor",
+    "Preempted",
+    "SimulatedCrash",
+    "Supervisor",
+    "assert_continuity",
+    "install_preemption_handler",
+]

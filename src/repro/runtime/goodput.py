@@ -1,0 +1,118 @@
+"""Goodput monitor: wall-time attribution for a training run (paper §6).
+
+Every second of a run is attributed to a bucket:
+
+  ``step``             — productive training compute (the only goodput)
+  ``compile``          — the first invocation of the jitted step (trace +
+                         XLA compile; includes that one step's compute)
+  ``init``             — param init / device placement / mesh build
+  ``restore``          — checkpoint read + device placement on resume
+  ``input_stall``      — the training thread waiting on the data iterator
+  ``checkpoint_stall`` — the training thread blocked inside ``save()``
+                         (snapshot + wait-for-previous-in-flight)
+  ``restart_loss``     — *virtual*: step time whose results were lost to a
+                         crash (recomputed after restarting from the last
+                         committed checkpoint); attributed by the supervisor
+
+plus an ``untracked`` remainder (logging, host loop overhead).
+
+``bucket(name)`` is a context manager; each exit appends a structured event
+``{"bucket", "t_start", "dur_s", ...meta}`` (and forwards it to an optional
+``sink`` callable for streaming telemetry). ``summary()`` folds events into
+per-bucket totals and the goodput fraction
+
+    goodput = (step_total - restart_loss) / wall_total.
+
+``restart_loss`` events are flagged ``virtual``: they re-attribute time that
+was already recorded under ``step``, so they are excluded from the
+wall-clock bucket sum (and from ``untracked``) but subtracted from
+productive time.
+
+On asynchronously-dispatching backends the ``step`` bucket measures host
+dispatch + any device sync the loop performs; on the CPU substrate (sync
+dispatch) it is exact device time.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+__all__ = ["GoodputMonitor"]
+
+PRODUCTIVE_BUCKET = "step"
+VIRTUAL_BUCKETS = ("restart_loss",)
+
+
+class GoodputMonitor:
+    def __init__(self, *, sink: Optional[Callable[[dict], None]] = None,
+                 time_fn: Callable[[], float] = time.monotonic):
+        self.events: List[Dict[str, Any]] = []
+        # Default metadata merged into every event (e.g. the supervisor tags
+        # the restart attempt so lost step time can be attributed later).
+        self.context: Dict[str, Any] = {}
+        self._sink = sink
+        self._time = time_fn
+        self._t0: Optional[float] = None
+        self._t_last: Optional[float] = None
+
+    # ------------------------------------------------------------- recording
+
+    def _touch(self, t: float):
+        if self._t0 is None:
+            self._t0 = t
+        self._t_last = t
+
+    def add_event(self, bucket: str, dur_s: float, **meta):
+        """Appends a pre-measured event (used for virtual buckets)."""
+        t = self._time()
+        self._touch(t)
+        event = {"bucket": bucket, "t_start": t - dur_s, "dur_s": float(dur_s),
+                 **self.context, **meta}
+        self.events.append(event)
+        if self._sink is not None:
+            self._sink(event)
+
+    @contextlib.contextmanager
+    def bucket(self, name: str, **meta):
+        """Attributes the wall time of the enclosed block to ``name``."""
+        t_start = self._time()
+        self._touch(t_start)
+        try:
+            yield
+        finally:
+            t_end = self._time()
+            self._touch(t_end)
+            event = {"bucket": name, "t_start": t_start,
+                     "dur_s": t_end - t_start, **self.context, **meta}
+            self.events.append(event)
+            if self._sink is not None:
+                self._sink(event)
+
+    # ------------------------------------------------------------- reporting
+
+    def bucket_totals(self) -> Dict[str, float]:
+        totals: Dict[str, float] = {}
+        for e in self.events:
+            totals[e["bucket"]] = totals.get(e["bucket"], 0.0) + e["dur_s"]
+        return totals
+
+    def summary(self) -> Dict[str, Any]:
+        """The run summary: per-bucket seconds, wall total, goodput."""
+        totals = self.bucket_totals()
+        wall = ((self._t_last - self._t0)
+                if self._t0 is not None and self._t_last is not None else 0.0)
+        tracked = sum(v for k, v in totals.items() if k not in VIRTUAL_BUCKETS)
+        productive = totals.get(PRODUCTIVE_BUCKET, 0.0)
+        lost = sum(totals.get(k, 0.0) for k in VIRTUAL_BUCKETS)
+        goodput = (productive - lost) / wall if wall > 0 else 0.0
+        return {
+            "wall_s": wall,
+            "buckets": totals,
+            "untracked_s": max(wall - tracked, 0.0),
+            "productive_s": productive,
+            "lost_s": lost,
+            "goodput_fraction": max(goodput, 0.0),
+            "num_events": len(self.events),
+        }

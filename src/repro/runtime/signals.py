@@ -1,0 +1,51 @@
+"""Preemption signaling: typed runtime exceptions + SIGTERM wiring (§5).
+
+Cloud schedulers announce a preemption by SIGTERM with a grace window. The
+handler here only sets a ``threading.Event`` (async-signal-safe); the
+training loop polls it between steps, takes a synchronous
+``emergency_save()``, and raises :class:`Preempted` — so the expensive work
+runs on the training thread with the full runtime available, never inside
+the signal handler.
+"""
+
+from __future__ import annotations
+
+import signal
+import threading
+from typing import Iterable, Optional
+
+__all__ = ["Preempted", "SimulatedCrash", "install_preemption_handler"]
+
+
+class Preempted(RuntimeError):
+    """The run stopped for a preemption signal AFTER committing an emergency
+    checkpoint (``.step`` = the resumable step)."""
+
+    def __init__(self, step: int, committed: bool = True):
+        super().__init__(f"preempted at step {step} "
+                         f"({'emergency checkpoint committed' if committed else 'no checkpointer'})")
+        self.step = step
+        self.committed = committed
+
+
+class SimulatedCrash(RuntimeError):
+    """Fault-injection stand-in for a hard process death (supervisor tests)."""
+
+    def __init__(self, step: int):
+        super().__init__(f"simulated crash at step {step}")
+        self.step = step
+
+
+def install_preemption_handler(
+        event: threading.Event,
+        signals: Iterable[int] = (signal.SIGTERM,)) -> dict:
+    """Routes ``signals`` to ``event.set()``; returns {signum: old_handler}
+    so a launcher can restore them."""
+    previous = {}
+
+    def _handler(signum, frame):  # noqa: ARG001
+        event.set()
+
+    for s in signals:
+        previous[s] = signal.signal(s, _handler)
+    return previous

@@ -1,0 +1,146 @@
+"""Restart supervisor: crash/preemption injection + resume verification (§5).
+
+An in-process harness that runs :class:`SpmdTrainer` the way a cluster
+controller would run a job: on a crash it "restarts the process" (a fresh
+trainer instance — new jit cache, new iterator, nothing carried over except
+the checkpoint directory) and lets the trainer resume from the latest
+COMMITTED checkpoint; on a preemption it delivers the signal event and
+expects an emergency checkpoint + zero lost steps.
+
+Faults are injected from the trainer's ``step_hook`` so they land at exact
+step boundaries:
+
+  ``crash``   — raises :class:`SimulatedCrash` after the step (and, if a
+                save was just launched, while that async write is in
+                flight); the supervisor then ``abort()``s the checkpointer
+                so the half-written step can never commit — the same
+                observable outcome as SIGKILL, since shard writes are
+                atomic and COMMITTED is written last.
+  ``preempt`` — sets the trainer's preemption event; the loop notices at
+                the next step boundary, takes a synchronous
+                ``emergency_save()`` and raises :class:`Preempted`.
+
+The supervisor attributes the step time lost to each crash (productive work
+past the last committed checkpoint, which the restart recomputes) to the
+goodput monitor's virtual ``restart_loss`` bucket, and keeps ONE monitor
+across attempts so the summary spans the whole supervised run.
+
+``run()`` returns the final trainer result plus ``losses`` — per-step loss
+from whichever attempt last executed that step — and
+:func:`assert_continuity` checks them against an uninterrupted reference:
+with exact state restore and exactly-once data, the curves must match.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.runtime.goodput import GoodputMonitor
+from repro.runtime.signals import Preempted, SimulatedCrash
+
+__all__ = ["Fault", "Supervisor", "assert_continuity"]
+
+
+@dataclasses.dataclass
+class Fault:
+    """One injected fault: fires once, after ``step`` executes."""
+
+    step: int
+    kind: str = "crash"  # "crash" | "preempt"
+    fired: bool = False
+
+    def __post_init__(self):
+        if self.kind not in ("crash", "preempt"):
+            raise ValueError(f"Unknown fault kind {self.kind!r}")
+
+
+def assert_continuity(losses: Dict[int, float], reference: Dict[int, float],
+                      *, atol: float = 0.0):
+    """Asserts the supervised run's loss curve matches the reference run's
+    (same steps, same losses) — the end-to-end correctness signal for
+    checkpoint restore + exactly-once data delivery."""
+    if set(losses) != set(reference):
+        raise AssertionError(
+            f"step sets differ: only-supervised={sorted(set(losses) - set(reference))[:5]} "
+            f"only-reference={sorted(set(reference) - set(losses))[:5]}")
+    bad = {s: (losses[s], reference[s]) for s in sorted(losses)
+           if abs(losses[s] - reference[s]) > atol}
+    if bad:
+        first = list(bad.items())[:3]
+        raise AssertionError(
+            f"loss curve diverged at {len(bad)} step(s) (atol={atol}): {first}")
+
+
+class Supervisor:
+    """Runs a trainer config under fault injection with auto-restart."""
+
+    def __init__(self, trainer_cfg, *, max_restarts: int = 8,
+                 monitor: Optional[GoodputMonitor] = None):
+        self.trainer_cfg = trainer_cfg
+        self.max_restarts = max_restarts
+        self.monitor = monitor if monitor is not None else GoodputMonitor()
+
+    def run(self, num_steps: Optional[int] = None,
+            faults: Sequence[Fault] = ()) -> Dict[str, Any]:
+        faults = [dataclasses.replace(f, fired=False) for f in faults]
+        losses: Dict[int, float] = {}
+        restarts = 0
+        attempts: List[Dict[str, Any]] = []
+        while True:
+            self.monitor.context["attempt"] = restarts
+            trainer = self.trainer_cfg.clone().instantiate()
+            executed: List[int] = []
+
+            def hook(*, step, state, metrics, trainer=trainer,
+                     executed=executed, **_):
+                losses[step] = float(metrics["loss"])
+                executed.append(step)
+                for f in faults:
+                    if not f.fired and f.step == step:
+                        f.fired = True
+                        if f.kind == "crash":
+                            raise SimulatedCrash(step)
+                        trainer.preemption_event.set()
+
+            try:
+                result = trainer.run(num_steps, monitor=self.monitor,
+                                     step_hook=hook)
+            except SimulatedCrash as e:
+                ckpt = getattr(trainer, "checkpointer", None)
+                latest = None
+                if ckpt is not None:
+                    # Process death: the in-flight async write never commits
+                    # (abort joins the write thread, so latest_step() below
+                    # cannot race a still-live committer).
+                    ckpt.abort()
+                    latest = ckpt.latest_step()
+                lost_steps = [s for s in executed if s >= (latest or 0)]
+                lost_s = sum(
+                    ev["dur_s"] for ev in self.monitor.events
+                    if ev["bucket"] == "step"
+                    and ev.get("attempt") == restarts
+                    and ev.get("step") in lost_steps)
+                self.monitor.add_event("restart_loss", lost_s, virtual=True,
+                                       crash_step=e.step,
+                                       resumed_from=latest or 0,
+                                       lost_steps=len(lost_steps))
+                attempts.append({"outcome": "crash", "at_step": e.step,
+                                 "resumed_from": latest or 0})
+                restarts += 1
+                if restarts > self.max_restarts:
+                    raise
+                continue
+            except Preempted as e:
+                attempts.append({"outcome": "preempt", "at_step": e.step,
+                                 "resumed_from": e.step})
+                restarts += 1
+                if restarts > self.max_restarts:
+                    raise
+                continue
+            attempts.append({"outcome": "completed"})
+            result["losses"] = losses
+            result["restarts"] = restarts
+            result["attempts"] = attempts
+            result["goodput"] = self.monitor.summary()
+            return result

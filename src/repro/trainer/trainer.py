@@ -9,6 +9,7 @@ paper's "a program that AOT-compiles will run at scale" property.
 
 from __future__ import annotations
 
+import threading
 import time
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -16,7 +17,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint.checkpointer import Checkpointer
+from repro.checkpoint.checkpointer import Checkpointer, CheckpointWriteError
+from repro.runtime.goodput import GoodputMonitor
+from repro.runtime.signals import Preempted
 from repro.core.config import REQUIRED, ConfigBase, Required, config_class
 from repro.core.module import Module, no_context
 from repro.core.utils import (
@@ -119,6 +122,11 @@ class SpmdTrainer(Module):
             self._add_child("checkpointer", cfg.checkpointer)
         self._mesh = None
         self._jit_step = None
+        self._step_has_run = False
+        # Set by a SIGTERM handler (see launch/train.py) or the supervisor's
+        # fault injection; the loop polls it at each step boundary, takes a
+        # synchronous emergency checkpoint, and raises Preempted.
+        self.preemption_event = threading.Event()
 
     # ----------------------------------------------------------------- setup
 
@@ -247,18 +255,34 @@ class SpmdTrainer(Module):
     # -------------------------------------------------------------------- run
 
     @no_context
-    def run(self, num_steps: Optional[int] = None) -> Dict[str, Any]:
+    def run(self, num_steps: Optional[int] = None, *,
+            monitor: Optional[GoodputMonitor] = None,
+            step_hook: Optional[Callable[..., None]] = None) -> Dict[str, Any]:
+        """Runs the training loop inside the fault-tolerance runtime.
+
+        ``monitor`` attributes wall time to goodput buckets (a fresh one is
+        created if not given; the supervisor passes one spanning restarts).
+        ``step_hook(step=, state=, metrics=, trainer=)`` fires after every
+        step (fault injection, custom telemetry).
+
+        Checkpoints carry the input iterator's state, so a resume replays
+        no data and skips none (exactly-once). When ``preemption_event`` is
+        set, the loop takes a synchronous emergency checkpoint at the next
+        step boundary and raises :class:`Preempted`.
+        """
         cfg = self.config
         num_steps = num_steps or cfg.max_steps
+        monitor = monitor if monitor is not None else GoodputMonitor()
         mesh = self.build_mesh()
         with set_mesh(mesh):
-            state = self.init_state()
-            state_shapes = jax.eval_shape(lambda: state)
-            shardings = self.state_shardings(state_shapes, mesh)
-            state = jax.device_put(state, shardings)
+            with monitor.bucket("init"):
+                state = self.init_state()
+                state_shapes = jax.eval_shape(lambda: state)
+                shardings = self.state_shardings(state_shapes, mesh)
+                state = jax.device_put(state, shardings)
 
-            sample = self.input.make_batch(0)
-            batch_sh = self.batch_shardings(sample, mesh)
+                sample = self.input.make_batch(0)
+                batch_sh = self.batch_shardings(sample, mesh)
             # The jitted step is engine-cached: repeated run() calls on one
             # trainer (warm restarts, resume-after-checkpoint) reuse the
             # compiled executable — the train step compiles exactly once.
@@ -271,26 +295,58 @@ class SpmdTrainer(Module):
                 )
             step_fn = self._jit_step
 
+            it = self.input.batches()
             start_step = 0
             if cfg.checkpointer is not None:
                 latest = self.checkpointer.latest_step()
                 if latest is not None:
-                    state = self.checkpointer.restore(latest, like=state)
-                    state = jax.device_put(state, shardings)
+                    with monitor.bucket("restore", step=latest):
+                        state = self.checkpointer.restore(latest, like=state)
+                        state = jax.device_put(state, shardings)
+                        aux = self.checkpointer.restore_aux(latest)
+                        if aux and "input" in aux and hasattr(it, "restore"):
+                            it.restore(aux["input"])
+                        elif hasattr(it, "restore"):
+                            print(f"[trainer] checkpoint step {latest} has no "
+                                  "input-iterator state; data stream restarts "
+                                  "from the beginning (pre-aux checkpoint?)")
                     start_step = latest
 
             watchdog = _Watchdog(cfg.watchdog_timeout_s,
                                  on_timeout=cfg.watchdog_on_timeout)
             history = []
-            it = self.input.batches()
             t0 = time.time()
             last_metrics = {}
             try:
                 for step in range(start_step, num_steps):
-                    batch = next(it)
+                    if self.preemption_event.is_set():
+                        committed = False
+                        if cfg.checkpointer is not None:
+                            with monitor.bucket("checkpoint_stall", step=step,
+                                                emergency=True):
+                                try:
+                                    committed = self.checkpointer.emergency_save(
+                                        step, state, aux={"input": it.state()}
+                                        if hasattr(it, "state") else None) is not None
+                                except CheckpointWriteError as e:
+                                    # Stay on the Preempted protocol (exit
+                                    # 143, resumable from an OLDER step)
+                                    # even if the emergency commit failed —
+                                    # e.g. a peer process died before its
+                                    # shard and the short barrier timed out.
+                                    print(f"[trainer] emergency save failed: {e}")
+                        raise Preempted(step, committed=committed)
+                    with monitor.bucket("input_stall", step=step):
+                        batch = next(it)
                     batch = jax.device_put(batch, batch_sh)
                     watchdog.beat(step)
-                    state, metrics = step_fn(state, batch)
+                    # The first invocation traces + XLA-compiles; attribute
+                    # it to "compile" (it includes that one step's compute).
+                    with monitor.bucket(
+                            "compile" if not self._step_has_run else "step",
+                            step=step):
+                        state, metrics = step_fn(state, batch)
+                    self._step_has_run = True
                     if cfg.sdc_check_every_n and step % cfg.sdc_check_every_n == 0:
                         self._sdc_check(batch)
                     if step % cfg.log_every_n == 0 or step == num_steps - 1:
@@ -301,18 +357,40 @@ class SpmdTrainer(Module):
                         last_metrics = m
                     if (cfg.checkpointer is not None and cfg.checkpoint_every_n
                             and (step + 1) % cfg.checkpoint_every_n == 0):
-                        self.checkpointer.save(step + 1, jax.device_get(state))
+                        # Async save: the training thread pays only the
+                        # device-side snapshot (+ any still-in-flight save);
+                        # staging and the write run in the background.
+                        with monitor.bucket("checkpoint_stall", step=step):
+                            self.checkpointer.save(
+                                step + 1, state, aux={"input": it.state()}
+                                if hasattr(it, "state") else None)
+                    if step_hook is not None:
+                        step_hook(step=step, state=state, metrics=metrics,
+                                  trainer=self)
             except KeyboardInterrupt:
                 # The watchdog timer interrupts the main thread on timeout
                 # in "raise" mode; convert to the typed error. A genuine
                 # Ctrl-C (watchdog never fired) re-raises unchanged.
                 watchdog.check()
                 raise
+            finally:
+                if hasattr(it, "close"):
+                    it.close()
+                # Disarm the timer on EVERY exit (a Preempted/fault-injected
+                # unwind must not leave a live timer to interrupt the next
+                # supervisor attempt). cancel() does not check(): a pending
+                # WatchdogTimeout must not mask the in-flight exception.
+                watchdog.cancel()
             watchdog.stop()
             if cfg.checkpointer is not None:
-                self.checkpointer.wait()
+                with monitor.bucket("checkpoint_stall", step=num_steps,
+                                    final_wait=True):
+                    self.checkpointer.wait()
             return {"state": state, "history": history, "final": last_metrics,
-                    "num_params": tree_param_count(state["params"])}
+                    "num_params": tree_param_count(state["params"]),
+                    "input_state": it.state() if hasattr(it, "state") else None,
+                    "goodput": monitor.summary(),
+                    "goodput_events": monitor.events}
 
     def _sdc_check(self, batch):
         """Paper §5: repeat a computation and compare for silent corruption."""
@@ -373,8 +451,12 @@ class _Watchdog:
         self._timer.daemon = True
         self._timer.start()
 
-    def stop(self):
+    def cancel(self):
+        """Disarms the timer without raising (safe inside ``finally``)."""
         if self._timer is not None:
             self._timer.cancel()
             self._timer = None
+
+    def stop(self):
+        self.cancel()
         self.check()

@@ -1,0 +1,262 @@
+"""Checkpointer v2 unit tests: error propagation, commit barrier, bounded
+staging, memory tier / emergency save, shape validation, aux state."""
+
+import json
+import os
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer, CheckpointWriteError
+
+
+def _state(seed=0, n=6, shape=(32, 16)):
+    rng = np.random.default_rng(seed)
+    return {"params": {f"w{i}": jnp.asarray(rng.standard_normal(shape), jnp.float32)
+                       for i in range(n)},
+            "step": jnp.asarray(seed, jnp.int32)}
+
+
+def _ckpt(directory, **overrides):
+    cfg = Checkpointer.default_config().set(directory=str(directory), **overrides)
+    return cfg.instantiate()
+
+
+# ----------------------------------------------------- async error propagation
+
+
+def test_async_write_error_raises_from_wait(tmp_path):
+    """Satellite: a failing background write must surface, not die in a
+    daemon thread. An unwritable directory (parent is a FILE, so makedirs
+    fails even for root) stands in for a read-only/full filesystem."""
+    blocker = tmp_path / "blocker"
+    blocker.write_text("not a directory")
+    ckpt = _ckpt(blocker / "ckpts")
+    ckpt.save(1, _state())
+    with pytest.raises(CheckpointWriteError):
+        ckpt.wait()
+    # The error is consumed once; the checkpointer is usable afterwards.
+    ckpt.wait()
+
+
+def test_async_write_error_raises_from_next_save(tmp_path):
+    blocker = tmp_path / "blocker"
+    blocker.write_text("not a directory")
+    ckpt = _ckpt(blocker / "ckpts")
+    ckpt.save(1, _state())
+    with pytest.raises(CheckpointWriteError):
+        ckpt.save(2, _state())
+
+
+def test_sync_write_error_raises_immediately(tmp_path):
+    blocker = tmp_path / "blocker"
+    blocker.write_text("not a directory")
+    ckpt = _ckpt(blocker / "ckpts", async_save=False)
+    with pytest.raises(CheckpointWriteError):
+        ckpt.save(1, _state())
+
+
+# ------------------------------------------------------------- commit barrier
+
+
+def test_committed_requires_all_shards(tmp_path):
+    """Satellite: process 0 must not commit after only its own shard (the
+    old code made half-written multi-process checkpoints visible)."""
+    state = _state()
+    p0 = _ckpt(tmp_path, process_index=0, process_count=2)
+    p1 = _ckpt(tmp_path, process_index=1, process_count=2)
+    p0.save(1, state)  # p0's commit barrier now polls for shard_1
+    time.sleep(0.2)
+    assert p0.latest_step() is None, "committed with shard_1 missing"
+    p1.save(1, state)
+    p1.wait()
+    p0.wait()  # barrier satisfied -> index + COMMITTED written
+    assert p0.latest_step() == 1
+    # Restore sees the union of both processes' leaves.
+    restored = p0.restore(1, like=state)
+    for a, b in zip(
+            [np.asarray(x) for x in state["params"].values()],
+            [np.asarray(x) for x in restored["params"].values()]):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_commit_barrier_times_out_loudly(tmp_path):
+    p0 = _ckpt(tmp_path, process_index=0, process_count=2,
+               commit_timeout_s=0.2)
+    p0.save(1, _state())
+    with pytest.raises(CheckpointWriteError, match="missing shards"):
+        p0.wait()
+
+
+def test_abort_prevents_commit(tmp_path):
+    """Simulated process death mid-save: no COMMITTED marker may appear, and
+    the previous committed step stays the restore target."""
+    ckpt = _ckpt(tmp_path, async_save=False)
+    ckpt.save(1, _state(1))
+    slow = _ckpt(tmp_path)
+
+    gate = threading.Event()
+    orig = slow._to_host
+
+    def gated(leaf):
+        gate.wait(timeout=5.0)
+        return orig(leaf)
+
+    slow._to_host = gated
+    slow.save(2, _state(2))  # async write stuck in staging
+    # abort() joins the write thread; release the gate from a timer so the
+    # abort flag is set while staging is genuinely in flight.
+    threading.Timer(0.2, gate.set).start()
+    slow.abort()
+    assert slow._save_thread is None  # joined inside abort()
+    assert slow.latest_step() == 1
+    assert not os.path.exists(tmp_path / "step_00000002" / "COMMITTED")
+
+
+# ------------------------------------------------------------ bounded staging
+
+
+def test_staging_concurrency_is_bounded(tmp_path):
+    """Satellite: the old per-iteration ``with sem:`` bounded nothing. The
+    staging pool must never have more than ``concurrency`` host copies in
+    flight."""
+    ckpt = _ckpt(tmp_path, concurrency=2, async_save=False)
+    lock = threading.Lock()
+    live = {"now": 0, "max": 0}
+    orig = ckpt._to_host
+
+    def counting(leaf):
+        with lock:
+            live["now"] += 1
+            live["max"] = max(live["max"], live["now"])
+        time.sleep(0.01)  # widen the overlap window
+        try:
+            return orig(leaf)
+        finally:
+            with lock:
+                live["now"] -= 1
+
+    ckpt._to_host = counting
+    ckpt.save(1, _state(n=12))
+    assert live["max"] <= 2, f"{live['max']} concurrent host copies"
+    assert live["max"] == 2, "staging never overlapped; pool broken?"
+    assert ckpt.latest_step() == 1
+
+
+# --------------------------------------------------- memory tier + emergency
+
+
+def test_memory_tier_flush_recovers_deleted_step(tmp_path):
+    import shutil
+
+    ckpt = _ckpt(tmp_path)
+    state = _state(3)
+    ckpt.save(5, state)
+    ckpt.wait()
+    shutil.rmtree(tmp_path / "step_00000005")  # durable tier gone
+    assert ckpt.latest_step() is None
+    assert ckpt.emergency_save() == 5  # flushed from the in-memory tier
+    assert ckpt.latest_step() == 5
+    restored = ckpt.restore(5, like=state)
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w0"]),
+                                  np.asarray(state["params"]["w0"]))
+
+
+def test_emergency_save_with_state_is_synchronous(tmp_path):
+    ckpt = _ckpt(tmp_path)
+    state = _state(7)
+    assert ckpt.emergency_save(9, state, aux={"input": {"next_batch": 9}}) == 9
+    # No wait() needed: committed before returning.
+    assert ckpt.latest_step() == 9
+    assert ckpt.restore_aux(9) == {"input": {"next_batch": 9}}
+
+
+def test_emergency_save_noop_without_memory(tmp_path):
+    assert _ckpt(tmp_path).emergency_save() is None
+
+
+def test_save_after_abort_raises_loudly(tmp_path):
+    """'Errors are never silent' extends to misuse: an aborted instance
+    must reject saves it would otherwise drop on the floor."""
+    ckpt = _ckpt(tmp_path)
+    ckpt.abort()
+    with pytest.raises(CheckpointWriteError, match="abort"):
+        ckpt.save(1, _state())
+
+
+def test_emergency_commit_barrier_uses_short_timeout(tmp_path):
+    """A preemption emergency save on process 0 must not stall for the full
+    commit_timeout_s waiting on a peer that died before its shard: the
+    emergency barrier budget applies, the error surfaces, and the caller
+    (trainer) downgrades to committed=False."""
+    p0 = _ckpt(tmp_path, process_index=0, process_count=2,
+               commit_timeout_s=60.0, emergency_commit_timeout_s=0.2)
+    t0 = time.monotonic()
+    with pytest.raises(CheckpointWriteError, match="missing shards"):
+        p0.emergency_save(1, _state())
+    assert time.monotonic() - t0 < 5.0, "emergency barrier used the full timeout"
+
+
+def test_emergency_save_after_abort_reports_nothing_committed(tmp_path):
+    """A dead (aborted) checkpointer must not claim an emergency commit:
+    _write_step is a no-op after abort(), so the step must not be
+    reported as resumable."""
+    ckpt = _ckpt(tmp_path)
+    ckpt.save(1, _state())
+    ckpt.wait()
+    ckpt.abort()
+    assert ckpt.emergency_save(2, _state(2)) is None
+    assert ckpt.emergency_save() is None  # memory-tier flush likewise
+    assert ckpt.latest_step() == 1
+
+
+# ------------------------------------------------------- restore validation
+
+
+def test_restore_validates_shapes_not_just_dtypes(tmp_path):
+    """Satellite: restoring into a differently-shaped model must fail with a
+    clear error (the old code silently reshaped nothing and crashed later —
+    or worse, broadcast)."""
+    ckpt = _ckpt(tmp_path, async_save=False)
+    ckpt.save(1, _state())
+    wrong = _state()
+    wrong["params"]["w0"] = jnp.zeros((8, 8), jnp.float32)
+    with pytest.raises(ValueError, match="shape"):
+        ckpt.restore(1, like=wrong)
+
+
+def test_restore_missing_leaf_error(tmp_path):
+    ckpt = _ckpt(tmp_path, async_save=False)
+    ckpt.save(1, _state())
+    like = _state()
+    like["params"]["extra"] = jnp.zeros((2,), jnp.float32)
+    with pytest.raises(ValueError, match="missing leaf"):
+        ckpt.restore(1, like=like)
+
+
+# ----------------------------------------------------------------- aux state
+
+
+def test_aux_roundtrip_and_absence(tmp_path):
+    ckpt = _ckpt(tmp_path)
+    ckpt.save(2, _state(), aux={"input": {"next_doc": 17, "buffer": [1, 2]}})
+    ckpt.wait()
+    assert ckpt.restore_aux(2) == {"input": {"next_doc": 17, "buffer": [1, 2]}}
+    assert ckpt.restore_aux() == ckpt.restore_aux(2)  # latest by default
+    ckpt.save(3, _state())  # no aux
+    ckpt.wait()
+    assert ckpt.restore_aux(3) is None
+    assert _ckpt(tmp_path / "empty").restore_aux() is None
+
+
+def test_shard_files_written_atomically(tmp_path):
+    ckpt = _ckpt(tmp_path, async_save=False)
+    ckpt.save(1, _state())
+    step_dir = tmp_path / "step_00000001"
+    leftovers = [f for f in os.listdir(step_dir) if ".tmp" in f]
+    assert not leftovers, leftovers
+    with open(step_dir / "index.json") as f:
+        assert json.load(f)["step"] == 1
