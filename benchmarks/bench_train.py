@@ -97,6 +97,39 @@ def _train_bench(arch, *, policy=None, steps=8, batch=8, seq=32):
     }
 
 
+def _fleet_bench(*, world=2, steps=6):
+    """Elastic multi-process goodput: a real 2-worker fleet (subprocess
+    workers, file-backed collectives) trained to completion; reports the
+    aggregated fleet goodput. Returns None when the elastic path cannot run
+    here (e.g. no subprocess spawning) — the fleet fields then simply do
+    not appear in BENCH_train.json."""
+    import shutil
+    import tempfile
+
+    from repro.runtime.supervisor import FleetSupervisor
+
+    wd = tempfile.mkdtemp(prefix="bench_fleet_")
+    try:
+        sup = FleetSupervisor(
+            wd, schedule=(world,), steps=steps, grad_microbatches=world,
+            builder_kwargs={"steps": steps, "checkpoint_every_n": steps})
+        res = sup.run()
+        g = res["goodput"]
+        return {
+            "world_size": world,
+            "steps": steps,
+            "fleet_goodput_fraction": g["fleet_goodput_fraction"],
+            "fleet_steady_goodput_fraction":
+                g["fleet_steady_goodput_fraction"],
+            "rank_seconds": g["rank_seconds"],
+            "productive_s": g["productive_s"],
+        }
+    except Exception:  # noqa: BLE001 — elastic path unavailable: omit fields
+        return None
+    finally:
+        shutil.rmtree(wd, ignore_errors=True)
+
+
 def run():
     global LAST_JSON
     rows = []
@@ -146,4 +179,12 @@ def run():
         rows.append((f"train_roofline_bound/{rec['arch']}", bound_s * 1e6,
                      f"dominant={r['dominant']};mfu_bound={mfu_bound:.3f}"))
     LAST_JSON = {"archs": archs_json, "roofline": roofline}
+    fleet = _fleet_bench()
+    if fleet is not None:  # fleet fields only when the elastic path ran
+        LAST_JSON["fleet"] = fleet
+        rows.append((
+            "train_fleet_goodput", fleet["rank_seconds"] * 1e6,
+            f"world={fleet['world_size']};"
+            f"goodput={fleet['fleet_goodput_fraction']:.3f};"
+            f"steady={fleet['fleet_steady_goodput_fraction']:.3f}"))
     return rows

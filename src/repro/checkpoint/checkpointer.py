@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 import threading
 import time
@@ -175,12 +176,24 @@ class Checkpointer(Module):
     def _write_step(self, step: int, staged: Dict[str, np.ndarray],
                     all_keys: List[str], aux: Optional[dict],
                     commit_timeout_s: Optional[float] = None):
-        """Writes this process's shard (+aux), then commits (process 0)."""
+        """Writes this process's shard (+aux), then commits (process 0) or
+        awaits process 0's COMMITTED marker (everyone else) — the barrier
+        is observed on ALL ranks, so a dead committer surfaces as a loud
+        CheckpointWriteError everywhere instead of a silent half-commit."""
         cfg = self.config
         step_dir = os.path.join(cfg.directory, f"step_{step:08d}")
         os.makedirs(step_dir, exist_ok=True)
         if self._aborted:
             return
+        # Aux BEFORE shard: the shard file is this process's "done" signal
+        # to the commit barrier, so everything riding along must already be
+        # in place when it appears (lets the committer clean stale tmp files
+        # without racing an in-flight peer).
+        if aux is not None:
+            aux_path = os.path.join(step_dir, f"aux_{cfg.process_index}.json")
+            with open(aux_path + ".tmp", "w") as f:
+                json.dump(aux, f)
+            os.replace(aux_path + ".tmp", aux_path)
         shard_path = os.path.join(step_dir, f"shard_{cfg.process_index}.npz")
         # Atomic write: a shard file that EXISTS is complete, which is what
         # lets the commit barrier treat existence as the per-process signal.
@@ -189,14 +202,11 @@ class Checkpointer(Module):
         np.savez(tmp_path,
                  **{k.replace("/", "|"): v for k, v in staged.items()})
         os.replace(tmp_path, shard_path)
-        if aux is not None:
-            aux_path = os.path.join(step_dir, f"aux_{cfg.process_index}.json")
-            with open(aux_path + ".tmp", "w") as f:
-                json.dump(aux, f)
-            os.replace(aux_path + ".tmp", aux_path)
         if cfg.process_index == 0:
             self._commit(step, step_dir, all_keys,
                          timeout_s=commit_timeout_s)
+        else:
+            self._await_commit(step, step_dir, timeout_s=commit_timeout_s)
 
     def _commit(self, step: int, step_dir: str, all_keys: List[str],
                 timeout_s: Optional[float] = None):
@@ -223,6 +233,22 @@ class Checkpointer(Module):
             time.sleep(0.02)
         if self._aborted:
             return
+        # Every rank's shard (and therefore aux) is in place; anything else
+        # in the step dir is debris from a previous torn attempt — stale
+        # ``*.tmp*`` files a mid-save SIGKILL left behind, or shards/aux of
+        # ranks beyond this fleet's world size (the same step re-saved
+        # after a restart at a smaller world size). Clean it BEFORE the
+        # marker so a COMMITTED step dir is exactly its manifest.
+        for fname in os.listdir(step_dir):
+            stale = ".tmp" in fname
+            m = re.fullmatch(r"(?:shard|aux)_(\d+)\.(?:npz|json)", fname)
+            if m and int(m.group(1)) >= cfg.process_count:
+                stale = True
+            if stale:
+                try:
+                    os.remove(os.path.join(step_dir, fname))
+                except OSError:
+                    pass
         index = {
             "step": step,
             "keys": all_keys,
@@ -236,6 +262,27 @@ class Checkpointer(Module):
         # Commit marker makes partially-written checkpoints invisible.
         with open(os.path.join(step_dir, "COMMITTED"), "w") as f:
             f.write("ok")
+
+    def _await_commit(self, step: int, step_dir: str,
+                      timeout_s: Optional[float] = None):
+        """Non-committer side of the barrier: wait for process 0's
+        COMMITTED marker. A timeout means the committer died (or a peer
+        never delivered its shard, so process 0 itself timed out) — raise
+        so every rank aborts the save loudly rather than training on top of
+        a checkpoint that never became durable."""
+        cfg = self.config
+        timeout_s = cfg.commit_timeout_s if timeout_s is None else timeout_s
+        deadline = time.monotonic() + timeout_s
+        marker = os.path.join(step_dir, "COMMITTED")
+        while not os.path.exists(marker):
+            if self._aborted:
+                return
+            if time.monotonic() > deadline:
+                raise CheckpointWriteError(
+                    f"commit barrier timed out after {timeout_s}s at step "
+                    f"{step}: process {cfg.process_index} wrote its shard "
+                    "but COMMITTED never appeared (committer dead?)")
+            time.sleep(0.02)
 
     @no_context
     def wait(self):
@@ -363,16 +410,22 @@ class Checkpointer(Module):
         return jax.tree_util.tree_unflatten(treedef, leaves)
 
     @no_context
-    def restore_aux(self, step: Optional[int] = None) -> Optional[dict]:
-        """This process's aux state for ``step`` (None if absent — e.g. a
-        checkpoint written before aux existed)."""
+    def restore_aux(self, step: Optional[int] = None, *,
+                    process_index: Optional[int] = None) -> Optional[dict]:
+        """Aux state for ``step`` (None if absent — e.g. a checkpoint
+        written before aux existed). ``process_index`` selects another
+        rank's aux — the resharding-restore path reads rank 0's (identical
+        across ranks under the elastic global-view input contract, and the
+        only one guaranteed to exist when the committing world size was
+        smaller than this one)."""
         cfg = self.config
         if step is None:
             step = self.latest_step()
             if step is None:
                 return None
+        p = cfg.process_index if process_index is None else process_index
         aux_path = os.path.join(cfg.directory, f"step_{step:08d}",
-                                f"aux_{cfg.process_index}.json")
+                                f"aux_{p}.json")
         if not os.path.exists(aux_path):
             return None
         with open(aux_path) as f:
@@ -381,13 +434,27 @@ class Checkpointer(Module):
     # ------------------------------------------------------------------- gc
 
     def _gc(self):
+        """Deletes old step dirs after a successful commit so long elastic
+        runs can't fill the disk. Rank 0 only (one deleter per fleet — peers
+        racing the same rmtree would trip each other); never the newest
+        COMMITTED; ``ignore_errors`` keeps it tolerant of concurrent readers
+        holding files open. Uncommitted dirs strictly OLDER than the newest
+        COMMITTED step are crash debris (a save that died mid-write and was
+        superseded) and are collected too — an uncommitted dir at or beyond
+        the newest commit may be an in-flight save and is left alone."""
         cfg = self.config
-        if not os.path.isdir(cfg.directory):
+        if cfg.process_index != 0 or not os.path.isdir(cfg.directory):
             return
-        steps = sorted(
+        all_steps = sorted(
             int(d[len("step_"):]) for d in os.listdir(cfg.directory)
-            if d.startswith("step_") and os.path.exists(
-                os.path.join(cfg.directory, d, "COMMITTED")))
-        for s in steps[:-cfg.keep_last_n] if cfg.keep_last_n > 0 else []:
+            if d.startswith("step_"))
+        committed = [s for s in all_steps if os.path.exists(os.path.join(
+            cfg.directory, f"step_{s:08d}", "COMMITTED"))]
+        doomed = set(committed[:-cfg.keep_last_n]
+                     if cfg.keep_last_n > 0 else [])
+        if committed:
+            doomed.update(s for s in all_steps
+                          if s not in committed and s < committed[-1])
+        for s in doomed:
             shutil.rmtree(os.path.join(cfg.directory, f"step_{s:08d}"),
                           ignore_errors=True)

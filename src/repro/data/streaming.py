@@ -31,7 +31,8 @@ import numpy as np
 from repro.core.config import REQUIRED, Required, config_class
 from repro.core.module import Module, no_context
 
-__all__ = ["StreamingTextInput", "StreamingTextIterator", "PrefetchIterator"]
+__all__ = ["StreamingTextInput", "StreamingTextIterator", "PrefetchIterator",
+           "reshard_streaming_states"]
 
 IGNORE_LABEL = -100
 
@@ -78,6 +79,51 @@ class StreamingTextIterator:
         self._next_doc = int(state["next_doc"])
         self._buffer = [int(t) for t in state["buffer"]]
         self._emitted = int(state.get("emitted", 0))
+
+
+def reshard_streaming_states(input_cfg, states: List[dict],
+                             new_count: int) -> List[dict]:
+    """Recomputes streaming-iterator states for a new world size.
+
+    ``states`` are the per-process iterator states saved by a checkpoint at
+    world size P; the return value is one state per process at world size
+    ``new_count``, positioned at the SAME global batch index — batch-level
+    exactly-once across the reshard (no global batch is replayed or
+    skipped).
+
+    Works by replay: every saved state carries ``emitted`` (the number of
+    batches this rank consumed, identical across ranks of a lockstep SPMD
+    job — verified here); a fresh iterator per new rank is fast-forwarded
+    that many batches. Document streams are pure functions of (seed, doc),
+    so replay is cheap and deterministic.
+
+    Content caveat: under ``doc % process_count`` host sharding, the
+    document→rank assignment (and hence batch *content*) depends on world
+    size, so resharded content differs even though positions line up.
+    Elastic training instead runs inputs in the global-view contract
+    (``process_count == 1`` on every rank — see
+    :class:`~repro.trainer.mesh_rules.ElasticModifier`), where this
+    function degenerates to an identity recompute and the loss curve is
+    world-size invariant.
+    """
+    if not states:
+        raise ValueError("need at least one saved iterator state")
+    emitted = {int(s.get("emitted", 0)) for s in states}
+    if len(emitted) != 1:
+        raise ValueError(
+            f"ranks out of lockstep: per-rank emitted counts "
+            f"{sorted(emitted)} differ — refusing to reshard a torn "
+            f"data cursor")
+    n_batches = emitted.pop()
+    out = []
+    for rank in range(new_count):
+        cfg = input_cfg.clone().set(process_index=rank,
+                                    process_count=new_count, prefetch=0)
+        it = StreamingTextIterator(cfg.instantiate())
+        for _ in range(n_batches):
+            next(it)
+        out.append(it.state())
+    return out
 
 
 class PrefetchIterator:

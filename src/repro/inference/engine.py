@@ -99,6 +99,9 @@ class GenerationResult:
     tokens: List[int]
     ttft_s: float = 0.0  # time to first token
     tpot_s: float = 0.0  # mean time per output token
+    # Deadline-expired: tokens holds whatever was generated before the
+    # scheduler cancelled the request (possibly nothing).
+    timed_out: bool = False
 
 
 class InferenceEngine(Module):

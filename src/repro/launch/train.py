@@ -126,7 +126,10 @@ def main():
     g = result["goodput"]
     buckets = " ".join(f"{k}={v:.2f}s"
                        for k, v in sorted(g["buckets"].items()))
+    # Raw goodput on short runs is dominated by one-time compile/init;
+    # steady excludes those startup buckets — the sustainable number.
     print(f"[train] goodput={g['goodput_fraction']:.3f} "
+          f"steady={g['steady_goodput_fraction']:.3f} "
           f"wall={g['wall_s']:.2f}s {buckets}")
     if args.out:
         with open(args.out, "w") as f:

@@ -39,10 +39,14 @@ import contextlib
 import time
 from typing import Any, Callable, Dict, List, Optional
 
-__all__ = ["GoodputMonitor"]
+__all__ = ["GoodputMonitor", "fleet_summary"]
 
 PRODUCTIVE_BUCKET = "step"
 VIRTUAL_BUCKETS = ("restart_loss",)
+# One-time costs excluded from steady-state goodput: raw goodput on a short
+# benchmark run is dominated by compile+init (e.g. 66%+27% of a 21 s run),
+# which says nothing about the fraction a long production run would sustain.
+STARTUP_BUCKETS = ("init", "compile", "restore")
 
 
 class GoodputMonitor:
@@ -107,6 +111,10 @@ class GoodputMonitor:
         productive = totals.get(PRODUCTIVE_BUCKET, 0.0)
         lost = sum(totals.get(k, 0.0) for k in VIRTUAL_BUCKETS)
         goodput = (productive - lost) / wall if wall > 0 else 0.0
+        # Steady state: what a long run would sustain once the one-time
+        # startup costs (compile, init, restore) are amortized away.
+        steady_wall = wall - sum(totals.get(b, 0.0) for b in STARTUP_BUCKETS)
+        steady = (productive - lost) / steady_wall if steady_wall > 0 else 0.0
         return {
             "wall_s": wall,
             "buckets": totals,
@@ -114,5 +122,49 @@ class GoodputMonitor:
             "productive_s": productive,
             "lost_s": lost,
             "goodput_fraction": max(goodput, 0.0),
+            "steady_wall_s": max(steady_wall, 0.0),
+            "steady_goodput_fraction": min(max(steady, 0.0), 1.0),
             "num_events": len(self.events),
         }
+
+
+def fleet_summary(rank_events: Dict[Any, List[Dict[str, Any]]], *,
+                  lost_s: float = 0.0) -> Dict[str, Any]:
+    """Folds per-rank goodput event streams into ONE fleet-level number.
+
+    ``rank_events`` maps a stream id (e.g. ``(attempt, rank)``) to that
+    worker's structured events. Fleet goodput is productive rank-seconds
+    over total rank-seconds — the fraction of the fleet's aggregate
+    capacity that trained: a rank idling in a barrier, recompiling after a
+    restart, or recomputing lost steps all drag it down. ``lost_s`` is
+    step time whose results a crash threw away (the supervisor computes it
+    from the restart point), subtracted from the productive numerator like
+    the monitor's virtual ``restart_loss`` bucket.
+    """
+    rank_seconds = 0.0
+    totals: Dict[str, float] = {}
+    for events in rank_events.values():
+        if not events:
+            continue
+        t0 = min(e["t_start"] for e in events)
+        t1 = max(e["t_start"] + e["dur_s"] for e in events)
+        rank_seconds += max(t1 - t0, 0.0)
+        for e in events:
+            if e["bucket"] not in VIRTUAL_BUCKETS:
+                totals[e["bucket"]] = totals.get(e["bucket"], 0.0) + e["dur_s"]
+    productive = totals.get(PRODUCTIVE_BUCKET, 0.0)
+    goodput = ((productive - lost_s) / rank_seconds) if rank_seconds > 0 \
+        else 0.0
+    steady_rank_s = rank_seconds - sum(totals.get(b, 0.0)
+                                       for b in STARTUP_BUCKETS)
+    steady = ((productive - lost_s) / steady_rank_s) if steady_rank_s > 0 \
+        else 0.0
+    return {
+        "num_streams": len(rank_events),
+        "rank_seconds": rank_seconds,
+        "buckets": totals,
+        "productive_s": productive,
+        "lost_s": lost_s,
+        "fleet_goodput_fraction": max(goodput, 0.0),
+        "fleet_steady_goodput_fraction": min(max(steady, 0.0), 1.0),
+    }

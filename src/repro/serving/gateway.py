@@ -57,10 +57,17 @@ class ServingGateway:
 
     def submit(self, prompt: np.ndarray, *,
                sampling: Optional[SamplingParams] = None, priority: int = 0,
+               deadline_s: Optional[float] = None,
                on_token: Optional[Callable[[int, int], None]] = None) -> int:
         """Enqueue a prompt; returns immediately with the request id. No
         device work happens until :meth:`step`/:meth:`stream`/:meth:`drain`
-        advances the scheduler."""
+        advances the scheduler.
+
+        ``deadline_s`` is a wall-clock latency SLO from submit: a request
+        still unfinished when it expires is cancelled (pages freed through
+        the normal preemption/teardown path) and resolves to a
+        ``timed_out=True`` result with whatever tokens it produced —
+        ``stream()``/``drain()`` terminate instead of hanging on it."""
         sampling = sampling or SamplingParams()
         rid = self._next_id
         self._next_id += 1
@@ -78,7 +85,7 @@ class ServingGateway:
             max_new_tokens=sampling.max_new_tokens,
             temperature=sampling.temperature, top_k=sampling.top_k,
             priority=priority, arrival_time=time.perf_counter(),
-            on_token=hook))
+            deadline_s=deadline_s, on_token=hook))
         return rid
 
     def step(self) -> bool:
@@ -123,7 +130,9 @@ class ServingGateway:
         tpots: List[float] = []
         for rid in list(self._queues):
             res = sched.result(rid)
-            if res is not None:
+            # Timed-out requests are excluded from the latency percentiles
+            # (their "latency" is the deadline, not a service time).
+            if res is not None and not res.timed_out:
                 ttfts.append(res.ttft_s)
                 tpots.append(res.tpot_s)
         wall = max(time.perf_counter() - self._t0, 1e-9)
@@ -136,6 +145,7 @@ class ServingGateway:
             "running": sum(s is not None for s in sched._slot_seq),
             "block_utilization": sched.block_utilization,
             "completed": sched.stats["completed"],
+            "timeouts": sched.stats["timeouts"],
             "preemptions": sched.stats["preemptions"],
             "restores": sched.stats["restores"],
             "prefill_chunks": sched.stats["prefill_chunks"],

@@ -65,6 +65,13 @@ class ServeRequest:
     priority: int = 0
     arrival_time: float = 0.0
     on_token: Optional[Callable[[int, int], None]] = None
+    # Wall-clock budget from submit. A request that has not COMPLETED
+    # within deadline_s — still queued, still prefilling, or mid-decode —
+    # is cancelled at the next iteration: its pages free through the
+    # normal teardown path and its result carries timed_out=True with
+    # whatever tokens it produced. Covers both TTFT and total-latency
+    # SLOs (no first token by the deadline is a fortiori a miss).
+    deadline_s: Optional[float] = None
 
 
 # Sequence lifecycle states.
@@ -84,6 +91,7 @@ class _Seq:
     evicted_rows: Optional[List[Optional[np.ndarray]]] = None
     evicted_pages: Optional[List[Optional[np.ndarray]]] = None
     n_preempt: int = 0
+    timed_out: bool = False
     t_submit: float = 0.0
     t_first: float = 0.0
     t_done: float = 0.0
@@ -161,7 +169,7 @@ class Scheduler:
         self.stats: Dict[str, Any] = {
             "admitted": 0, "completed": 0, "preemptions": 0, "restores": 0,
             "decode_steps": 0, "prefill_chunks": 0, "max_concurrent": 0,
-            "truncated": 0,
+            "truncated": 0, "timeouts": 0,
         }
 
     # ------------------------------------------------------------- plumbing
@@ -343,9 +351,35 @@ class Scheduler:
         seq.state = _DONE
         seq.t_done = time.perf_counter()
         self._done[seq.req.request_id] = seq
-        self.stats["completed"] += 1
+        if seq.timed_out:
+            self.stats["timeouts"] += 1
+        else:
+            self.stats["completed"] += 1
         if truncated:
             self.stats["truncated"] += 1
+
+    def _time_out(self, seq: _Seq):
+        """Cancel a deadline-expired sequence wherever it is in its
+        lifecycle, releasing its device resources through the normal
+        teardown path."""
+        seq.timed_out = True
+        if seq.state == _WAITING:
+            self._waiting.remove(seq)
+        elif seq.state == _PREEMPTED:
+            self._preempted.remove(seq)
+            # _evict already freed the pages and the slot; drop the host
+            # payload so _finish doesn't free the (reused) page ids again.
+            seq.pages = []
+            seq.evicted_rows = seq.evicted_pages = None
+        self._finish(seq)
+
+    def _expire_deadlines(self):
+        now = time.perf_counter()
+        live = [s for s in self._slot_seq if s is not None]
+        for seq in list(self._waiting) + list(self._preempted) + live:
+            d = seq.req.deadline_s
+            if d is not None and now - seq.t_submit > d:
+                self._time_out(seq)
 
     def _emit(self, seq: _Seq, tok: int):
         if not seq.tokens:
@@ -481,8 +515,10 @@ class Scheduler:
                 self._finish(seq)
 
     def step(self) -> bool:
-        """One scheduler iteration: fill slots, one prefill chunk, one fused
-        decode step. Returns whether any work remains."""
+        """One scheduler iteration: expire deadlines, fill slots, one
+        prefill chunk, one fused decode step. Returns whether any work
+        remains."""
+        self._expire_deadlines()
         self._fill_slots()
         self._prefill_one()
         self._decode_step()
@@ -501,18 +537,7 @@ class Scheduler:
             if guard > 100_000:
                 raise RuntimeError("scheduler livelock (pool too small for "
                                    "any single sequence?)")
-        out = []
-        for r in requests:
-            seq = self._done[r.request_id]
-            ttft = max(seq.t_first - seq.t_submit, 0.0)
-            n = len(seq.tokens)
-            if n > 1:
-                tpot = (seq.t_done - seq.t_first) / (n - 1)
-            else:
-                tpot = ttft  # single-token request: prefill was the work
-            out.append(GenerationResult(r.request_id, seq.tokens,
-                                        ttft_s=ttft, tpot_s=tpot))
-        return out
+        return [self.result(r.request_id) for r in requests]
 
     def is_done(self, request_id: int) -> bool:
         return request_id in self._done
@@ -522,7 +547,13 @@ class Scheduler:
         if seq is None:
             return None
         n = len(seq.tokens)
-        ttft = max(seq.t_first - seq.t_submit, 0.0)
-        tpot = (seq.t_done - seq.t_first) / (n - 1) if n > 1 else ttft
+        if n == 0:  # cancelled before the first token
+            ttft = max(seq.t_done - seq.t_submit, 0.0)
+        else:
+            ttft = max(seq.t_first - seq.t_submit, 0.0)
+        if n > 1:
+            tpot = (seq.t_done - seq.t_first) / (n - 1)
+        else:
+            tpot = ttft  # single-token request: prefill was the work
         return GenerationResult(request_id, seq.tokens, ttft_s=ttft,
-                                tpot_s=tpot)
+                                tpot_s=tpot, timed_out=seq.timed_out)

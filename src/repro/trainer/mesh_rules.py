@@ -36,6 +36,8 @@ __all__ = [
     "GradAccumModifier",
     "DtypePolicyModifier",
     "Zero1Modifier",
+    "FsdpModifier",
+    "ElasticModifier",
     "apply_mesh_rules",
 ]
 
@@ -189,6 +191,85 @@ class Zero1Modifier(ConfigModifier):
     def apply(self, trainer_cfg):
         trainer_cfg.set(
             opt_state_sharding="zero1" if self.config.enabled else "params")
+        return trainer_cfg
+
+
+class FsdpModifier(ConfigModifier):
+    """FSDP-style parameter sharding over the data axes (config-only).
+
+    Params shard by the same first-free-divisible-dim rule ZeRO-1 applies
+    to optimizer state; combine with :class:`Zero1Modifier` for fully
+    data-sharded params + optimizer (per-device bytes ~N× smaller on an
+    N-way data mesh)::
+
+        FsdpModifier.default_config().set(axes=("data",))
+    """
+
+    @config_class
+    class Config(ConfigModifier.Config):
+        axes: Tuple[str, ...] = ("pod", "data")
+        enabled: bool = True
+
+    @no_context
+    def apply(self, trainer_cfg):
+        trainer_cfg.set(
+            fsdp_axes=tuple(self.config.axes) if self.config.enabled
+            else None)
+        return trainer_cfg
+
+
+class ElasticModifier(ConfigModifier):
+    """Turns a single-process trainer config into one rank of an elastic
+    fleet (the launch layer applies this per worker).
+
+    Sets the trainer's ``distributed`` runtime config, points the
+    checkpointer at this rank's slice of the commit barrier, and switches
+    the input to the *global-view contract*: every rank generates the
+    identical global batch (input ``process_count=1``) and the elastic step
+    slices its own canonical microbatches — the property that makes
+    checkpoints resumable at a different world size with a bitwise-identical
+    loss curve.
+    """
+
+    @config_class
+    class Config(ConfigModifier.Config):
+        coordinator_dir: str = ""
+        process_index: int = 0
+        process_count: int = 1
+        # Canonical gradient decomposition G (0 -> process_count). For
+        # loss-curve continuity across resharding, set G to the LCM of
+        # every world size the job may restart at.
+        grad_microbatches: int = 0
+        collective_timeout_s: float = 60.0
+        backend: str = "file"  # "file" | "jax"
+        coordinator_address: str = ""
+
+    @no_context
+    def apply(self, trainer_cfg):
+        from repro.launch.distributed import DistributedConfig
+
+        c = self.config
+        trainer_cfg.set(distributed=DistributedConfig().set(
+            coordinator_dir=c.coordinator_dir,
+            process_index=c.process_index,
+            process_count=c.process_count,
+            grad_microbatches=c.grad_microbatches,
+            collective_timeout_s=c.collective_timeout_s,
+            backend=c.backend,
+            coordinator_address=c.coordinator_address,
+        ))
+        if trainer_cfg.checkpointer is not None:
+            trainer_cfg.checkpointer.set(
+                process_index=c.process_index,
+                process_count=c.process_count,
+                # The commit barrier is a collective too: a dead peer must
+                # surface on the same timescale as a dead step collective.
+                commit_timeout_s=c.collective_timeout_s)
+        # Global-view input: rank-independent batches (the elastic step
+        # slices microbatches; doc%N host sharding would make the data, and
+        # therefore the loss curve, world-size-dependent).
+        if "process_count" in trainer_cfg.input.keys():
+            trainer_cfg.input.set(process_index=0, process_count=1)
         return trainer_cfg
 
 

@@ -25,6 +25,7 @@ from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec
 
 from repro.core.module import functional
@@ -38,6 +39,9 @@ __all__ = [
     "build_train_step",
     "zero1_partition_spec",
     "constrain_tree",
+    "slice_microbatch",
+    "combine_microbatch_grads",
+    "canonical_mean",
 ]
 
 TrainState = Dict[str, Any]
@@ -186,6 +190,75 @@ def make_grad_fn(loss_fn: Callable, *, grad_accum_steps: int = 1,
         return total * inv, {"loss": loss * inv, "aux_loss": aux * inv}, grads
 
     return compute_grads
+
+
+# ---------------------------------------------------------------------------
+# Elastic (world-size-invariant) microbatch decomposition
+# ---------------------------------------------------------------------------
+#
+# The elastic trainer decomposes every global batch into a FIXED number of
+# canonical microbatches G, independent of how many processes share the work
+# (each process computes a contiguous block of them with the same jitted
+# per-microbatch program). Gradients are then combined on the host in
+# canonical microbatch order with left-associative float32 arithmetic — the
+# same programs, the same data, and the same addition order at every world
+# size means bitwise-identical optimizer updates whether the job runs on 1
+# process or N, which is what lets a resharded resume reproduce the
+# uninterrupted loss curve exactly.
+
+
+def slice_microbatch(batch: Dict[str, Any], mb_index: int,
+                     num_microbatches: int) -> Dict[str, Any]:
+    """Canonical microbatch ``mb_index`` of the GLOBAL batch: the contiguous
+    row block ``[m*B/G, (m+1)*B/G)`` of every batch-dim entry; non-batch
+    entries (shared position arrays, scalars) pass through unchanged."""
+    arrays = {k: v for k, v in batch.items()
+              if hasattr(v, "shape") and getattr(v, "ndim", 0) >= 1}
+    for anchor in ("labels", "input_ids"):
+        if anchor in arrays:
+            B = arrays[anchor].shape[0]
+            break
+    else:
+        B = arrays[sorted(arrays)[0]].shape[0]
+    if B % num_microbatches != 0:
+        raise ValueError(
+            f"Global batch size {B} is not divisible by grad_microbatches="
+            f"{num_microbatches}")
+    sz = B // num_microbatches
+    lo = mb_index * sz
+    return {k: (v[lo:lo + sz] if k in arrays and v.shape[0] == B else v)
+            for k, v in batch.items()}
+
+
+def canonical_mean(values: Sequence[Any]) -> np.ndarray:
+    """Left-associative float32 mean in the given (canonical) order. Every
+    process must fold contributions through this exact reduction for the
+    result to be bitwise world-size-invariant."""
+    acc = np.zeros_like(np.asarray(values[0], np.float32))
+    for v in values:
+        acc = (acc + np.asarray(v, np.float32)).astype(np.float32)
+    return (acc * np.float32(1.0 / len(values))).astype(np.float32)
+
+
+def combine_microbatch_grads(per_mb_leaves: Sequence[Sequence[Any]],
+                             treedef) -> Any:
+    """Host-side mean of per-microbatch gradient contributions.
+
+    ``per_mb_leaves[m]`` is microbatch ``m``'s flat leaf list (float32
+    numpy arrays, in ``jax.tree_util.tree_flatten`` order). Accumulation is
+    leaf-wise, left-associative over microbatches in canonical order — see
+    :func:`canonical_mean` for why the order is load-bearing.
+    """
+    G = len(per_mb_leaves)
+    accs = [np.array(leaf, dtype=np.float32, copy=True)
+            for leaf in per_mb_leaves[0]]
+    for leaves in per_mb_leaves[1:]:
+        for i, leaf in enumerate(leaves):
+            accs[i] += np.asarray(leaf, np.float32)
+    inv = np.float32(1.0 / G)
+    for i in range(len(accs)):
+        accs[i] *= inv
+    return jax.tree_util.tree_unflatten(treedef, accs)
 
 
 # ---------------------------------------------------------------------------

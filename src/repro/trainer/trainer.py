@@ -30,10 +30,18 @@ from repro.core.utils import (
     tree_param_count,
 )
 from repro.data.input import SyntheticInput
+from repro.launch.distributed import initialize as distributed_initialize
 from repro.layers.base import ParameterSpec
 from repro.trainer.learner import Learner
 from repro.trainer.optimizers import global_norm
-from repro.trainer.train_step import build_train_step, zero1_partition_spec
+from repro.trainer.train_step import (
+    build_train_step,
+    canonical_mean,
+    combine_microbatch_grads,
+    make_loss_fn,
+    slice_microbatch,
+    zero1_partition_spec,
+)
 
 __all__ = ["SpmdTrainer", "TrainState", "WatchdogTimeout"]
 
@@ -85,6 +93,20 @@ class SpmdTrainer(Module):
         mesh_shape: Tuple[int, ...] = (1,)
         mesh_axis_names: Tuple[str, ...] = ("data",)
         batch_partition: Any = (("pod", "data"),)  # applied to dim 0 of inputs
+        # FSDP-style parameter sharding: when set, every parameter's first
+        # free divisible dim is additionally sharded over these mesh axes
+        # (the same partitioning rule ZeRO-1 applies to optimizer state,
+        # lifted to the params themselves). Set by FsdpModifier.
+        fsdp_axes: Optional[Tuple[str, ...]] = None
+        # Elastic multi-process runtime (a repro.launch.distributed
+        # .DistributedConfig). When set, run() takes the world-size-
+        # invariant step path: the global batch decomposes into
+        # ``distributed.grad_microbatches`` canonical microbatches, each
+        # process computes its block, contributions are allgathered and
+        # combined in canonical order on the host — bitwise-identical
+        # updates at every world size (reshard-on-resume continuity).
+        # Set by ElasticModifier.
+        distributed: Optional[ConfigBase] = None
         # --- loop ---
         max_steps: int = 100
         seed: int = 0
@@ -149,7 +171,19 @@ class SpmdTrainer(Module):
     @no_context
     def param_shardings(self, mesh=None):
         mesh = mesh or self.build_mesh()
+        cfg = self.config
         specs = self.param_specs()
+        if cfg.fsdp_axes:
+            from jax.sharding import NamedSharding
+
+            # FSDP: params shard over the data axes with the same first-
+            # free-divisible-dim rule ZeRO-1 uses for optimizer state (a
+            # param that already uses an axis, or has no dividing dim, keeps
+            # its own spec).
+            return jax.tree.map(
+                lambda s: NamedSharding(
+                    mesh, zero1_partition_spec(s, mesh, cfg.fsdp_axes)),
+                specs, is_leaf=lambda s: isinstance(s, ParameterSpec))
         return jax.tree.map(
             lambda s: named_sharding(s.mesh_axes, mesh), specs,
             is_leaf=lambda s: isinstance(s, ParameterSpec))
@@ -252,6 +286,115 @@ class SpmdTrainer(Module):
             param_partition_specs=param_specs,
         )
 
+    # ----------------------------------------------------------- elastic step
+
+    @no_context
+    def _make_elastic_step(self, shardings) -> Callable:
+        """The world-size-invariant step for elastic multi-process training.
+
+        The global batch (every process holds the identical global batch —
+        the ElasticModifier configures the input with the global view)
+        decomposes into G = ``distributed.grad_microbatches`` canonical
+        microbatches. Process p computes microbatches
+        ``[p*G/N, (p+1)*G/N)`` with ONE jitted per-microbatch program whose
+        shapes do not depend on the world size, allgathers the float32
+        contributions, and every process folds all G of them in canonical
+        order with left-associative host arithmetic before one jitted
+        optimizer-update program. Same programs + same data + same
+        reduction order ⇒ bitwise-identical states at every world size —
+        a checkpoint committed at world size P resumes at P' with the loss
+        curve of the uninterrupted run.
+        """
+        cfg = self.config
+        dcfg = cfg.distributed
+        N = dcfg.process_count
+        G = dcfg.grad_microbatches or N
+        if G % max(N, 1) != 0:
+            raise ValueError(
+                f"grad_microbatches={G} must be divisible by process_count="
+                f"{N} (set it to the LCM of every world size the job may "
+                "run at)")
+        if getattr(cfg.input, "process_count", 1) != 1:
+            raise ValueError(
+                "elastic training requires the global-view input contract "
+                "(input.process_count == 1 on every rank; the trainer "
+                "slices canonical microbatches itself) — apply "
+                "ElasticModifier instead of sharding the input")
+        collective = distributed_initialize(dcfg)  # None at world size 1
+        per_rank = G // max(N, 1)
+        mine = range(dcfg.process_index * per_rank,
+                     (dcfg.process_index + 1) * per_rank)
+
+        loss_fn = make_loss_fn(
+            self.model, aux_loss_weight=cfg.learner.aux_loss_weight,
+            aux_loss_pattern=cfg.learner.aux_loss_pattern)
+        mb_grad_fn = jax.jit(jax.value_and_grad(loss_fn, has_aux=True))
+
+        learner = self.learner
+        update_specs = param_specs = None
+        if cfg.opt_state_sharding == "zero1":
+            mesh = self.build_mesh()
+            update_specs = self.zero1_partition_specs(mesh)
+            param_specs = jax.tree.map(
+                lambda s: resolve_spec(s.mesh_axes, mesh), self.param_specs(),
+                is_leaf=lambda s: isinstance(s, ParameterSpec))
+
+        def apply_updates(state, grads):
+            new_params, new_opt = learner.apply_updates(
+                grads, state["opt_state"], state["params"],
+                update_partition_specs=update_specs,
+                param_partition_specs=param_specs)
+            new_state = {
+                "step": state["step"] + 1,
+                "prng_key": state["prng_key"],
+                "params": new_params,
+                "opt_state": new_opt,
+            }
+            return new_state, global_norm(grads)
+
+        apply_fn = jax.jit(apply_updates, donate_argnums=(0,))
+
+        def elastic_step(state, batch):
+            step_key = jax.random.fold_in(state["prng_key"], state["step"])
+            payload: Dict[str, np.ndarray] = {}
+            treedef = None
+            n_leaves = 0
+            for m in mine:
+                mb = slice_microbatch(batch, m, G)
+                mb_key = jax.random.fold_in(step_key, m)
+                (total, parts), grads = mb_grad_fn(state["params"], mb,
+                                                   mb_key)
+                leaves, treedef = jax.tree_util.tree_flatten(grads)
+                n_leaves = len(leaves)
+                for i, leaf in enumerate(leaves):
+                    # float32 exchange: bitwise-stable through the .npz
+                    # roundtrip and under numpy accumulation on every rank.
+                    payload[f"{m:05d}.g{i:05d}"] = np.asarray(
+                        leaf, np.float32)
+                payload[f"{m:05d}.metrics"] = np.asarray(
+                    [total, parts["loss"], parts["aux_loss"]], np.float32)
+            if collective is None:
+                merged = payload
+            else:
+                merged = {}
+                for contribution in collective.allgather(payload):
+                    merged.update(contribution)
+            per_mb = [[merged[f"{m:05d}.g{i:05d}"] for i in range(n_leaves)]
+                      for m in range(G)]
+            grads = combine_microbatch_grads(per_mb, treedef)
+            scalar_means = canonical_mean(
+                [merged[f"{m:05d}.metrics"] for m in range(G)])
+            new_state, grad_norm = apply_fn(state, grads)
+            metrics = {
+                "total_loss": scalar_means[0],
+                "grad_norm": grad_norm,
+                "loss": scalar_means[1],
+                "aux_loss": scalar_means[2],
+            }
+            return new_state, metrics
+
+        return elastic_step
+
     # -------------------------------------------------------------------- run
 
     @no_context
@@ -287,12 +430,15 @@ class SpmdTrainer(Module):
             # trainer (warm restarts, resume-after-checkpoint) reuse the
             # compiled executable — the train step compiles exactly once.
             if self._jit_step is None:
-                self._jit_step = jax.jit(
-                    self.make_train_step(),
-                    in_shardings=(shardings, batch_sh),
-                    out_shardings=(shardings, None),
-                    donate_argnums=(0,),
-                )
+                if cfg.distributed is not None:
+                    self._jit_step = self._make_elastic_step(shardings)
+                else:
+                    self._jit_step = jax.jit(
+                        self.make_train_step(),
+                        in_shardings=(shardings, batch_sh),
+                        out_shardings=(shardings, None),
+                        donate_argnums=(0,),
+                    )
             step_fn = self._jit_step
 
             it = self.input.batches()
@@ -303,7 +449,15 @@ class SpmdTrainer(Module):
                     with monitor.bucket("restore", step=latest):
                         state = self.checkpointer.restore(latest, like=state)
                         state = jax.device_put(state, shardings)
-                        aux = self.checkpointer.restore_aux(latest)
+                        # Elastic mode uses the global-view input contract:
+                        # every rank's iterator state is identical, so a
+                        # checkpoint committed at world size P restores into
+                        # P' ranks by reading rank 0's aux — the reshard is
+                        # a no-op by construction.
+                        aux = self.checkpointer.restore_aux(
+                            latest,
+                            process_index=0 if cfg.distributed is not None
+                            else None)
                         if aux and "input" in aux and hasattr(it, "restore"):
                             it.restore(aux["input"])
                         elif hasattr(it, "restore"):

@@ -1,17 +1,60 @@
-"""Test-suite conftest: no-network fallback shim for ``hypothesis``.
+"""Test-suite conftest: ``multiprocess`` marker + hypothesis fallback shim.
 
-Some environments (including the CI container) don't ship ``hypothesis``;
-the property tests then degraded to hard collection errors for whole test
-modules. When the real library is importable we use it untouched; otherwise
-we install a tiny deterministic stand-in into ``sys.modules`` *before* test
-modules import it. The shim runs each ``@given`` test over ``max_examples``
-pseudo-random draws from a fixed seed — weaker than real shrinking/coverage,
-but it keeps the properties exercised everywhere.
+``@pytest.mark.multiprocess`` marks tests that spawn real worker
+subprocesses coordinating through the filesystem (the elastic-training
+drills). A hung collective there would otherwise block the whole suite, so
+each such test runs under a SIGALRM watchdog (default 300 s, override with
+``@pytest.mark.multiprocess(timeout=N)``) that fails the test instead of
+hanging it. Deselect them with ``-m "not multiprocess"`` for a fast pass.
+
+Hypothesis: some environments (including the CI container) don't ship
+``hypothesis``; the property tests then degraded to hard collection errors
+for whole test modules. When the real library is importable we use it
+untouched; otherwise we install a tiny deterministic stand-in into
+``sys.modules`` *before* test modules import it. The shim runs each
+``@given`` test over ``max_examples`` pseudo-random draws from a fixed seed
+— weaker than real shrinking/coverage, but it keeps the properties
+exercised everywhere.
 """
 
 import random
+import signal
 import sys
 import types
+
+import pytest
+
+_MULTIPROCESS_DEFAULT_TIMEOUT_S = 300
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "multiprocess(timeout=300): test spawns worker subprocesses; runs "
+        "under a SIGALRM watchdog so a dead collective fails instead of "
+        "hanging the suite")
+
+
+@pytest.fixture(autouse=True)
+def _multiprocess_watchdog(request):
+    marker = request.node.get_closest_marker("multiprocess")
+    if marker is None or not hasattr(signal, "SIGALRM"):
+        yield
+        return
+    timeout = int(marker.kwargs.get("timeout",
+                                    _MULTIPROCESS_DEFAULT_TIMEOUT_S))
+
+    def on_alarm(signum, frame):
+        pytest.fail(f"multiprocess test exceeded {timeout}s watchdog "
+                    f"(dead worker / hung collective?)", pytrace=False)
+
+    prev = signal.signal(signal.SIGALRM, on_alarm)
+    signal.alarm(timeout)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, prev)
 
 
 def _install_hypothesis_shim():

@@ -260,3 +260,98 @@ def test_shard_files_written_atomically(tmp_path):
     assert not leftovers, leftovers
     with open(step_dir / "index.json") as f:
         assert json.load(f)["step"] == 1
+
+
+# -------------------------------------------------------- gc + reshard restore
+
+
+def test_gc_keeps_last_n_committed_steps(tmp_path):
+    """Satellite: keep_last_n GC after each successful commit — older
+    committed step dirs are deleted, never the newest, and the survivors
+    still restore."""
+    ckpt = _ckpt(tmp_path, async_save=False, keep_last_n=2)
+    for step in range(5):
+        ckpt.save(step, _state(step))
+    dirs = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert dirs == ["step_00000003", "step_00000004"]
+    assert ckpt.latest_step() == 4
+    restored = ckpt.restore(like=_state())
+    np.testing.assert_array_equal(np.asarray(restored["step"]), 4)
+
+
+def test_gc_collects_stale_uncommitted_debris_only(tmp_path):
+    """Uncommitted dirs OLDER than the newest COMMITTED step are crash
+    debris and get collected; an uncommitted dir at/beyond the newest commit
+    may be an in-flight save and must be left alone."""
+    ckpt = _ckpt(tmp_path, async_save=False, keep_last_n=10)
+    ckpt.save(1, _state(1))
+    os.makedirs(tmp_path / "step_00000000")  # torn older save
+    (tmp_path / "step_00000000" / "shard_0.npz.tmp.npz").write_bytes(b"torn")
+    os.makedirs(tmp_path / "step_00000004")  # "in-flight" newer save
+    ckpt.save(3, _state(3))  # commit -> gc
+    dirs = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert dirs == ["step_00000001", "step_00000003", "step_00000004"]
+
+
+def test_gc_runs_on_rank_zero_only(tmp_path):
+    """One deleter per fleet: a non-zero rank must never GC (peers racing
+    the same rmtree would trip each other)."""
+    ckpt0 = _ckpt(tmp_path, async_save=False, keep_last_n=2)
+    ckpt0.save(1, _state(1))
+    ckpt0.save(2, _state(2))
+    rank1 = _ckpt(tmp_path, process_index=1, process_count=2, keep_last_n=1)
+    rank1._gc()
+    dirs = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert dirs == ["step_00000001", "step_00000002"]
+
+
+def test_restore_aux_selects_other_ranks_file(tmp_path):
+    """Resharding restore reads rank 0's aux regardless of own rank (the
+    committing fleet may have been smaller than this one)."""
+    state = _state()
+    p0 = _ckpt(tmp_path, process_index=0, process_count=2, async_save=False)
+    p1 = _ckpt(tmp_path, process_index=1, process_count=2, async_save=False)
+    t = threading.Thread(target=lambda: p1.save(1, state, aux={"rank": 1}))
+    t.start()
+    p0.save(1, state, aux={"rank": 0})  # barrier: waits for p1's shard
+    t.join(timeout=30)
+    assert not t.is_alive()
+    assert p1.restore_aux(1) == {"rank": 1}
+    assert p1.restore_aux(1, process_index=0) == {"rank": 0}
+    assert p0.restore_aux(1) == {"rank": 0}
+
+
+def test_await_commit_times_out_when_committer_dies(tmp_path):
+    """Non-zero ranks observe the barrier too: if process 0 never commits,
+    the rank's save fails loudly instead of silently 'succeeding'."""
+    p1 = _ckpt(tmp_path, process_index=1, process_count=2,
+               commit_timeout_s=0.2)
+    p1.save(1, _state())
+    with pytest.raises(CheckpointWriteError, match="committer dead"):
+        p1.wait()
+
+
+def test_recommit_at_smaller_world_size_cleans_foreign_shards(tmp_path):
+    """A step re-saved after restarting at a smaller world size: the commit
+    sweeps shards/aux of ranks beyond the new process_count, so the
+    COMMITTED dir is exactly its manifest."""
+    state = _state()
+    p0 = _ckpt(tmp_path, process_index=0, process_count=2, async_save=False)
+    p1 = _ckpt(tmp_path, process_index=1, process_count=2, async_save=False)
+    t = threading.Thread(target=lambda: p1.save(1, state, aux={"r": 1}))
+    t.start()
+    p0.save(1, state, aux={"r": 0})
+    t.join(timeout=30)
+    step_dir = tmp_path / "step_00000001"
+    # Simulate the restart: wipe COMMITTED (as a torn re-save attempt dir
+    # would lack it) and re-save the same step from a 1-process fleet.
+    os.remove(step_dir / "COMMITTED")
+    (step_dir / "shard_0.npz.tmp.npz").write_bytes(b"torn")
+    solo = _ckpt(tmp_path, async_save=False)
+    solo.save(1, state, aux={"r": "solo"})
+    files = sorted(os.listdir(step_dir))
+    assert files == ["COMMITTED", "aux_0.json", "index.json", "shard_0.npz"]
+    assert solo.restore_aux(1) == {"r": "solo"}
+    restored = solo.restore(1, like=state)
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w0"]),
+                                  np.asarray(state["params"]["w0"]))

@@ -244,3 +244,43 @@ def test_trainer_runs_on_streaming_input():
     # 6 batches consumed, exactly once, through the prefetch queue.
     assert result["input_state"]["emitted"] == 6
     assert result["goodput"]["buckets"]["input_stall"] >= 0.0
+
+
+# --------------------------------------------- reshard_streaming_states
+
+
+def test_reshard_streaming_states_positions_and_exactly_once():
+    """A data cursor saved at world size P recomputes to P' at the SAME
+    global batch index: no batch replayed, none skipped."""
+    from repro.data.streaming import reshard_streaming_states
+
+    cfg = StreamingTextInput.default_config().set(
+        name="in", vocab_size=64, seq_len=16, global_batch_size=4, prefetch=0)
+    it = StreamingTextIterator(cfg.instantiate())
+    _take(it, 3)
+    saved = [it.state()]
+
+    for new_count in (1, 2):
+        states = reshard_streaming_states(cfg, saved, new_count)
+        assert len(states) == new_count
+        assert all(s["emitted"] == 3 for s in states)
+
+    # Identity reshard (1 -> 1): the recomputed cursor continues with the
+    # bitwise-identical next batch the original iterator would produce.
+    (state,) = reshard_streaming_states(cfg, saved, 1)
+    resumed = StreamingTextIterator(cfg.instantiate())
+    resumed.restore(state)
+    _assert_batches_equal([next(resumed)], [next(it)])
+
+
+def test_reshard_streaming_states_rejects_torn_cursor():
+    """Ranks whose emitted counts disagree were not in lockstep — resharding
+    such a cursor would replay or drop batches, so it must refuse."""
+    from repro.data.streaming import reshard_streaming_states
+
+    cfg = StreamingTextInput.default_config().set(
+        name="in", vocab_size=64, seq_len=16, global_batch_size=4, prefetch=0)
+    with pytest.raises(ValueError, match="out of lockstep"):
+        reshard_streaming_states(cfg, [{"emitted": 2}, {"emitted": 3}], 2)
+    with pytest.raises(ValueError, match="at least one"):
+        reshard_streaming_states(cfg, [], 1)

@@ -523,3 +523,103 @@ def test_serving_path_compile_count_bounded():
     n_chunk_fns = sum(1 for k in engine._jit_fns
                       if isinstance(k, tuple) and k[0] == "serve_chunk")
     assert n_chunk_fns <= 4  # chunks of 8, 4, 2, 1
+
+
+# ------------------------------ deadlines ------------------------------------
+
+
+def test_deadline_expired_request_returns_timed_out_without_hanging():
+    """A queued request whose deadline has already passed is cancelled at
+    the next iteration: drain() resolves it (timed_out, no tokens) instead
+    of serving — or hanging on — it, and the co-submitted request is
+    unaffected."""
+    engine = _engine(_tiny_lm("paged", num_pages=1 + 16), slots=2)
+    gw = ServingGateway(engine, prefill_chunk=4)
+    rng = np.random.default_rng(7)
+    rid_ok = gw.submit(rng.integers(0, 48, size=(6,)),
+                       sampling=SamplingParams(max_new_tokens=4))
+    rid_dead = gw.submit(rng.integers(0, 48, size=(6,)),
+                         sampling=SamplingParams(max_new_tokens=4),
+                         deadline_s=0.0)
+    results = gw.drain()
+    assert results[rid_dead].timed_out
+    assert results[rid_dead].tokens == []
+    assert not results[rid_ok].timed_out
+    assert len(results[rid_ok].tokens) == 4
+    m = gw.metrics()
+    assert m["timeouts"] == 1 and m["completed"] == 1
+    # Timed-out requests don't pollute the latency percentiles.
+    assert m["ttft_p50_s"] > 0
+
+
+def test_stream_terminates_on_deadline():
+    engine = _engine(_tiny_lm("paged", num_pages=1 + 16), slots=2)
+    gw = ServingGateway(engine, prefill_chunk=4)
+    rid = gw.submit(np.arange(2, 8), sampling=SamplingParams(max_new_tokens=8),
+                    deadline_s=0.0)
+    assert list(gw.stream(rid)) == []
+    res = gw.result(rid)
+    assert res is not None and res.timed_out
+
+
+def test_deadline_mid_decode_frees_pages_and_keeps_partial_tokens():
+    """A request cancelled mid-decode frees its pages and slot through the
+    normal teardown path; the result keeps the tokens generated so far."""
+    engine = _engine(_tiny_lm("paged", num_pages=1 + 8, page=4),
+                     max_len=16, slots=2)
+    sched = Scheduler(engine, prefill_chunk=4)
+    rng = np.random.default_rng(8)
+    sched.submit(ServeRequest(request_id=0,
+                              prompt=rng.integers(0, 48, size=(4,)),
+                              max_new_tokens=12, deadline_s=60.0))
+    seq = None
+    for _ in range(50):
+        sched.step()
+        seq = sched._done.get(0) or next(
+            (s for s in sched._slot_seq if s is not None), None)
+        if seq is not None and len(seq.tokens) >= 2:
+            break
+    assert seq is not None and len(seq.tokens) >= 2
+    assert not sched.is_done(0)
+    assert sched.allocator.num_in_use > 0
+    seq.t_submit -= 120.0  # the deadline passes "now"
+    sched.step()
+    assert sched.is_done(0)
+    res = sched.result(0)
+    assert res.timed_out and len(res.tokens) >= 2
+    assert sched.stats["timeouts"] == 1
+    assert sched.allocator.num_in_use == 0
+    assert all(s is None for s in sched._slot_seq)
+    assert not sched.has_work
+
+
+def test_deadline_on_preempted_sequence_no_double_free():
+    """Expiring a sequence that sits EVICTED (pages already freed, host
+    payload pending restore) must not free pages twice nor corrupt the
+    allocator; the surviving request completes normally."""
+    engine = _engine(_tiny_lm("paged", num_pages=1 + 4, page=4),
+                     max_len=16, slots=2)
+    sched = Scheduler(engine, prefill_chunk=4)
+    rng = np.random.default_rng(9)
+    p_low = rng.integers(0, 48, size=(6,))
+    p_high = rng.integers(0, 48, size=(6,))
+    sched.submit(ServeRequest(request_id=0, prompt=p_low, max_new_tokens=8,
+                              priority=0, deadline_s=60.0))
+    sched.submit(ServeRequest(request_id=1, prompt=p_high, max_new_tokens=8,
+                              priority=1))
+    victim = None
+    for _ in range(200):
+        if sched._preempted:
+            victim = sched._preempted[0]
+            break
+        sched.step()
+    assert victim is not None, "pool contention never evicted the low-prio"
+    assert victim.req.request_id == 0
+    victim.t_submit -= 120.0
+    while sched.step():
+        pass
+    res0, res1 = sched.result(0), sched.result(1)
+    assert res0.timed_out
+    assert not res1.timed_out and len(res1.tokens) == 8
+    assert sched.allocator.num_in_use == 0
+    assert sched.allocator.num_free == sched.allocator.capacity
