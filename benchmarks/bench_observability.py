@@ -1,0 +1,135 @@
+"""Observability overhead: instrument cost and end-to-end step-time delta.
+
+The observability subsystem's contract is "free when off, ~free when on":
+hot-path record calls are dict updates (no I/O — sinks see data at flush),
+spans are two clock reads and a list append, and ALL instrumentation lives
+outside jit (the compile-count tests prove zero added retraces). This
+benchmark pins the numbers:
+
+  * per-call cost of ``Counter.inc`` / ``Gauge.set`` / ``Histogram.record``
+    (at reservoir steady state) / ``Tracer.span`` / ``add_span``,
+  * the end-to-end warm step-time delta of the SAME tiny trainer run with
+    observability off vs fully on (metrics JSONL + trace + MFU gauges) —
+    the <1% budget the issue sets (the tests enforce it as an absolute
+    per-log-step bound; this reports the A/B delta exactly).
+
+``run.py`` persists ``LAST_JSON`` as ``BENCH_observability.json``.
+"""
+
+import os
+import tempfile
+import time
+
+from repro.core.config import config_for_function
+
+LAST_JSON = None
+
+
+def _per_call_ns(fn, n=200_000):
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e9
+
+
+def _instrument_costs():
+    from repro.observability.metrics import MetricsRegistry
+    from repro.observability.tracing import Tracer
+
+    reg = MetricsRegistry()
+    c = reg.counter("bench/c")
+    g = reg.gauge("bench/g")
+    h = reg.histogram("bench/h")
+    for i in range(2048):  # past reservoir capacity: steady-state record
+        h.record(float(i))
+    tracer = Tracer(pid=0)
+
+    def span():
+        with tracer.span("s"):
+            pass
+
+    out = {
+        "counter_inc_ns": _per_call_ns(lambda: c.inc()),
+        "gauge_set_ns": _per_call_ns(lambda: g.set(1.0)),
+        "histogram_record_ns": _per_call_ns(lambda: h.record(0.5)),
+        "tracer_span_ns": _per_call_ns(span, n=50_000),
+        "tracer_add_span_ns": _per_call_ns(
+            lambda: tracer.add_span("s", 0.0, 1.0), n=50_000),
+    }
+    tracer.events.clear()
+    return out
+
+
+def _tiny_trainer(*, observability, steps=12):
+    from repro.layers import CausalLM, Decoder, Repeat, TransformerLayer
+    from repro.trainer import optimizers as opt_lib
+    from repro.trainer.trainer import SpmdTrainer
+
+    dim = 32
+    layer = TransformerLayer.default_config().set(input_dim=dim)
+    layer.self_attention.set(num_heads=4, num_kv_heads=2)
+    layer.feed_forward.set(hidden_dim=2 * dim)
+    model = CausalLM.default_config().set(
+        decoder=Decoder.default_config().set(
+            vocab_size=32, dim=dim,
+            stack=Repeat.default_config().set(layer=layer, num_layers=2,
+                                              remat_policy=None)))
+    cfg = SpmdTrainer.default_config().set(
+        name="bench_obs", model=model, max_steps=steps, log_every_n=1,
+        observability=observability)
+    cfg.input.set(task="lm", vocab_size=32, seq_len=16, global_batch_size=8)
+    cfg.learner.optimizer = config_for_function(opt_lib.adamw).set(
+        peak_lr=1e-2)
+    return cfg.instantiate()
+
+
+def _step_time(trainer, steps):
+    """Median warm-step time, measured per-step INSIDE one run via a
+    ``step_hook`` timestamp at each step boundary. One-time costs —
+    compile (before the first boundary), the end-of-run trace save (after
+    the last) — cannot smear into the per-step number, and the median
+    shrugs off GC/timer spikes that a mean amortizes in."""
+    ts = []
+    trainer.run(num_steps=steps,
+                step_hook=lambda **kw: ts.append(time.perf_counter()))
+    deltas = sorted(b - a for a, b in zip(ts, ts[1:]))
+    return deltas[len(deltas) // 2]
+
+
+def _step_delta(steps=24):
+    from repro.observability.runtime import ObservabilityConfig
+
+    with tempfile.TemporaryDirectory(prefix="bench_obs_") as tmp:
+        obs_cfg = ObservabilityConfig(
+            metrics_path=os.path.join(tmp, "metrics.jsonl"),
+            trace_path=os.path.join(tmp, "trace.json"))
+        # Interleave off/on pairs so drift (thermal, page cache) hits both.
+        off_s, on_s = [], []
+        for _ in range(3):
+            off_s.append(_step_time(
+                _tiny_trainer(observability=None, steps=steps), steps))
+            on_s.append(_step_time(
+                _tiny_trainer(observability=obs_cfg, steps=steps), steps))
+        off, on = min(off_s), min(on_s)
+        return {
+            "step_us_observability_off": off * 1e6,
+            "step_us_observability_on": on * 1e6,
+            "step_time_delta_frac": (on - off) / off,
+        }
+
+
+def run():
+    global LAST_JSON
+    costs = _instrument_costs()
+    delta = _step_delta()
+    LAST_JSON = {**costs, **delta}
+    return [
+        ("obs_counter_inc", costs["counter_inc_ns"] / 1e3, "per-call"),
+        ("obs_gauge_set", costs["gauge_set_ns"] / 1e3, "per-call"),
+        ("obs_histogram_record", costs["histogram_record_ns"] / 1e3,
+         "per-call (reservoir steady state)"),
+        ("obs_tracer_span", costs["tracer_span_ns"] / 1e3, "per-call"),
+        ("obs_step_overhead", delta["step_us_observability_on"]
+         - delta["step_us_observability_off"],
+         f"delta_frac={delta['step_time_delta_frac']:+.4f}"),
+    ]

@@ -23,6 +23,7 @@ import jax
 
 from repro.configs import registry
 from repro.core.config import config_for_function
+from repro.observability.hardware import estimate_mfu
 from repro.trainer import optimizers as opt_lib
 from repro.trainer.trainer import SpmdTrainer
 
@@ -54,24 +55,17 @@ def _make_trainer(arch, *, policy=None, steps=8, batch=8, seq=32):
     return cfg.instantiate()
 
 
-def _peak_hbm_proxy(trainer):
-    """XLA memory analysis of the compiled train step: argument + temp +
-    output bytes — the dominant terms of peak HBM on an accelerator."""
-    try:
-        state_shapes = jax.eval_shape(trainer.init_state)
-        batch = trainer.input.make_batch(0)
-        batch_abs = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
-                     for k, v in batch.items()}
-        compiled = trainer._jit_step.lower(state_shapes, batch_abs).compile()
-        ma = compiled.memory_analysis()
-        return int(ma.argument_size_in_bytes + ma.temp_size_in_bytes
-                   + ma.output_size_in_bytes)
-    except Exception:  # noqa: BLE001 — backend without memory_analysis
-        from repro.core.utils import tree_bytes
-
+def _step_cost(trainer):
+    """Compiled-step cost via the trainer's own observability hook
+    (``step_cost_analysis``: flops, bytes_accessed, peak_hbm_proxy_bytes),
+    with a parameter-bytes fallback when the backend reports nothing."""
+    cost = dict(trainer.step_cost_analysis())
+    if not cost.get("peak_hbm_proxy_bytes"):
         state = jax.eval_shape(trainer.init_state)
-        return sum(l.size * l.dtype.itemsize
-                   for l in jax.tree.leaves(state) if hasattr(l, "size"))
+        cost["peak_hbm_proxy_bytes"] = sum(
+            l.size * l.dtype.itemsize
+            for l in jax.tree.leaves(state) if hasattr(l, "size"))
+    return cost
 
 
 def _train_bench(arch, *, policy=None, steps=8, batch=8, seq=32):
@@ -84,6 +78,9 @@ def _train_bench(arch, *, policy=None, steps=8, batch=8, seq=32):
     result = trainer.run(num_steps=steps)
     wall = time.perf_counter() - t0
     per_step = wall / steps
+    cost = _step_cost(trainer)
+    n_dev = max(len(jax.devices()), 1)
+    mfu = estimate_mfu(cost.get("flops"), per_step, num_devices=n_dev)
     return {
         # Warm, steady-state step time: the trainer's engine-cached jit means
         # the step compiles exactly once per process (incl. resume), so this
@@ -91,8 +88,13 @@ def _train_bench(arch, *, policy=None, steps=8, batch=8, seq=32):
         "step_us": per_step * 1e6,
         "first_run_us_incl_compile": first_run * 1e6,
         "tokens_per_s": batch * seq / per_step,
+        "tokens_per_s_per_device": batch * seq / per_step / n_dev,
+        "step_flops": cost.get("flops"),
+        # Achieved/peak model FLOP/s on THIS backend (CPU here: tracks
+        # relative movement, not an accelerator-meaningful absolute).
+        "mfu": mfu,
         "num_params": int(result["num_params"]),
-        "peak_hbm_proxy_bytes": _peak_hbm_proxy(trainer),
+        "peak_hbm_proxy_bytes": cost["peak_hbm_proxy_bytes"],
         "final_loss": float(result["final"]["loss"]),
     }
 
@@ -137,8 +139,11 @@ def run():
     for arch in BENCH_ARCHS:
         fp32 = _train_bench(arch)
         archs_json[arch] = {"fp32": fp32}
+        mfu_str = (f"{fp32['mfu']:.4f}" if fp32["mfu"] is not None
+                   else "n/a")
         rows.append((f"train_step/{arch}", fp32["step_us"],
                      f"tokens_per_s={fp32['tokens_per_s']:.0f};"
+                     f"mfu={mfu_str};"
                      f"peak_hbm_proxy={fp32['peak_hbm_proxy_bytes']};"
                      f"params={fp32['num_params']}"))
         if arch in BF16_ARCHS:

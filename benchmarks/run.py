@@ -10,6 +10,8 @@
   bench_serving    — serving load: Poisson arrivals through the paged
                      gateway (p50/p99 TTFT/TPOT, tokens/s, preemptions)
   bench_scaling    — Fig 4 (single-pod vs multi-pod scaling from dry-runs)
+  bench_observability — metrics/span per-call cost + step-time delta with
+                     full observability on vs off (the <1% budget)
 
 Prints ``name,us_per_call,derived`` CSV. Modules may expose a ``LAST_JSON``
 dict after ``run()``; it is persisted as ``BENCH_<suffix>.json`` next to the
@@ -27,6 +29,7 @@ def main() -> None:
         bench_inference,
         bench_kernels,
         bench_loc,
+        bench_observability,
         bench_scaling,
         bench_serving,
         bench_train,
@@ -34,7 +37,8 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     for mod in (bench_loc, bench_kernels, bench_train, bench_checkpoint,
-                bench_inference, bench_serving, bench_scaling):
+                bench_inference, bench_serving, bench_scaling,
+                bench_observability):
         try:
             rows = mod.run()
         except Exception as e:  # noqa: BLE001

@@ -268,6 +268,7 @@ def worker_argv(python: str, *, builder: str, builder_kwargs: dict,
                 grad_microbatches: int, checkpoint_dir: str, result: str,
                 steps: Optional[int] = None,
                 collective_timeout_s: float = 60.0,
+                trace: str = "",
                 sigkill_at_step: Optional[int] = None,
                 sigterm_at_step: Optional[int] = None,
                 kill_during_save_step: Optional[int] = None) -> List[str]:
@@ -284,6 +285,8 @@ def worker_argv(python: str, *, builder: str, builder_kwargs: dict,
             "--collective-timeout", str(collective_timeout_s)]
     if steps is not None:
         argv += ["--steps", str(steps)]
+    if trace:
+        argv += ["--trace", trace]
     if sigkill_at_step is not None:
         argv += ["--sigkill-at-step", str(sigkill_at_step)]
     if sigterm_at_step is not None:
@@ -331,6 +334,10 @@ def run_worker(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--result", default="")
     ap.add_argument("--collective-timeout", type=float, default=60.0)
+    ap.add_argument("--trace", default="",
+                    help="Chrome trace-event JSON path for this rank "
+                         "(pid lane = process index; the supervisor merges "
+                         "the per-rank files into one fleet trace)")
     ap.add_argument("--backend", default="file")
     ap.add_argument("--coordinator-address", default="")
     ap.add_argument("--sigkill-at-step", type=int, default=None)
@@ -359,6 +366,14 @@ def run_worker(argv: Optional[List[str]] = None) -> int:
         backend=args.backend,
         coordinator_address=args.coordinator_address,
     ).instantiate().apply(cfg)
+
+    if args.trace:
+        from repro.observability.runtime import ObservabilityConfig
+
+        # Per-rank span trace on the rank's own pid lane; wall-clock
+        # timebase, so the supervisor's merge lands all ranks on one axis.
+        cfg.observability = ObservabilityConfig(
+            trace_path=args.trace, rank=args.process_index, mfu=False)
 
     trainer = cfg.instantiate()
     install_preemption_handler(trainer.preemption_event)

@@ -1,0 +1,166 @@
+"""Hardware-utilization hooks: MFU from XLA cost analysis, HBM gauges,
+and an on-demand ``jax.profiler`` window.
+
+MFU (model FLOPs utilization) is THE cross-hardware efficiency number
+(Modalities/PaLM convention): achieved model FLOP/s over the chip's peak.
+The numerator comes from the *compiled* train step's own
+``cost_analysis()`` — what XLA will actually execute, including remat
+recompute — so it needs no analytical per-arch FLOP formula and stays
+correct under kernel/remat/dtype changes. The denominator is a
+per-platform peak table, overridable per run (``peak_flops_per_device``)
+because "the" peak depends on dtype and part number.
+
+On this CPU container the absolute MFU is not meaningful as a hardware
+number, but the plumbing (compiled-cost → per-step gauge → BENCH_train
+column) is exactly what runs on an accelerator, and relative movement
+still tracks regressions.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Dict, Optional
+
+import jax
+
+__all__ = [
+    "PEAK_FLOPS_PER_DEVICE",
+    "compiled_cost",
+    "device_memory_stats",
+    "estimate_mfu",
+    "peak_flops_for_platform",
+    "ProfilerWindow",
+]
+
+# Representative bf16 peak FLOP/s per device. TPU matches the roofline
+# constant the dry-run analysis already uses (v5e 197 TFLOP/s); GPU is an
+# A100-class bf16 peak; CPU is a nominal AVX-class figure so the MFU
+# column exists (and tracks relative changes) off-accelerator.
+PEAK_FLOPS_PER_DEVICE: Dict[str, float] = {
+    "tpu": 197e12,
+    "gpu": 312e12,
+    "cpu": 1e11,
+}
+
+
+def peak_flops_for_platform(platform: Optional[str] = None) -> float:
+    platform = platform or jax.default_backend()
+    return PEAK_FLOPS_PER_DEVICE.get(platform, PEAK_FLOPS_PER_DEVICE["cpu"])
+
+
+def compiled_cost(compiled) -> Dict[str, Optional[float]]:
+    """FLOPs + bytes-accessed of a compiled executable via XLA's own cost
+    analysis (``None`` fields when the backend doesn't report them).
+    ``cost_analysis()`` returns a dict on some backends and a one-element
+    list of dicts on others; both are handled."""
+    flops = bytes_accessed = None
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0] if ca else {}
+        if ca:
+            flops = float(ca.get("flops", 0.0)) or None
+            bytes_accessed = float(ca.get("bytes accessed", 0.0)) or None
+    except Exception:  # noqa: BLE001 — backend without cost analysis
+        pass
+    return {"flops": flops, "bytes_accessed": bytes_accessed}
+
+
+def estimate_mfu(flops_per_step: Optional[float], step_time_s: float, *,
+                 num_devices: int = 1, platform: Optional[str] = None,
+                 peak_flops_per_device: float = 0.0) -> Optional[float]:
+    """Achieved model FLOP/s over aggregate peak; None when unmeasurable.
+
+    ``flops_per_step`` is the GLOBAL compiled-step FLOPs (XLA reports the
+    whole SPMD program); the denominator scales by ``num_devices``.
+    """
+    if not flops_per_step or step_time_s <= 0:
+        return None
+    peak = peak_flops_per_device or peak_flops_for_platform(platform)
+    if peak <= 0:
+        return None
+    return flops_per_step / (step_time_s * peak * max(num_devices, 1))
+
+
+def device_memory_stats(device=None) -> Dict[str, float]:
+    """Per-device memory stats (peak HBM in ``peak_bytes_in_use`` on
+    TPU/GPU). Empty dict on backends without memory stats (CPU)."""
+    device = device or jax.local_devices()[0]
+    try:
+        stats = device.memory_stats()
+    except Exception:  # noqa: BLE001
+        stats = None
+    if not stats:
+        return {}
+    return {k: float(v) for k, v in stats.items()
+            if isinstance(v, (int, float))}
+
+
+class ProfilerWindow:
+    """On-demand ``jax.profiler`` capture of steps ``[start, stop]``.
+
+    The trainer calls :meth:`on_step_start` / :meth:`on_step_end` at each
+    step boundary; the window starts the trace before ``start`` executes
+    and stops it after ``stop`` completes, writing a TensorBoard-loadable
+    profile under ``logdir``. Inactive (both bounds < 0) it is two integer
+    compares per step. Profiler failures (unsupported backend, busy
+    session) degrade to a warning — profiling must never kill a run.
+    """
+
+    def __init__(self, logdir: str = "", *, start_step: int = -1,
+                 stop_step: int = -1):
+        if start_step >= 0 and stop_step < start_step:
+            raise ValueError(
+                f"profiler window stop_step {stop_step} precedes start_step "
+                f"{start_step}")
+        self.logdir = logdir
+        self.start_step = start_step
+        self.stop_step = stop_step
+        self.active = False
+        self.captured = False
+        self.error: Optional[str] = None
+
+    @property
+    def enabled(self) -> bool:
+        return bool(self.logdir) and self.start_step >= 0
+
+    def on_step_start(self, step: int):
+        if not self.enabled or self.active or self.captured:
+            return
+        if step >= self.start_step:
+            try:
+                jax.profiler.start_trace(self.logdir)
+                self.active = True
+            except Exception as e:  # noqa: BLE001
+                self.error = repr(e)
+                self.captured = True  # don't retry every step
+                print(f"[observability] profiler start failed: {e}")
+
+    def on_step_end(self, step: int):
+        if self.active and step >= self.stop_step:
+            self._stop()
+
+    def _stop(self):
+        try:
+            jax.profiler.stop_trace()
+        except Exception as e:  # noqa: BLE001
+            self.error = repr(e)
+            print(f"[observability] profiler stop failed: {e}")
+        self.active = False
+        self.captured = True
+
+    def close(self):
+        """Stop a still-open window (run ended early / preemption)."""
+        if self.active:
+            self._stop()
+
+
+@contextlib.contextmanager
+def profiler_window(logdir: str):
+    """Imperative capture of an arbitrary block (notebooks, benches)."""
+    w = ProfilerWindow(logdir, start_step=0, stop_step=0)
+    w.on_step_start(0)
+    try:
+        yield w
+    finally:
+        w.close()

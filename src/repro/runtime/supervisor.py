@@ -45,7 +45,40 @@ from repro.runtime.goodput import GoodputMonitor, fleet_summary
 from repro.runtime.signals import Preempted, SimulatedCrash
 
 __all__ = ["Fault", "Supervisor", "assert_continuity",
-           "FleetFault", "FleetSupervisor", "latest_committed_step"]
+           "FleetFault", "FleetSupervisor", "latest_committed_step",
+           "step_boundary_skew"]
+
+
+def step_boundary_skew(rank_events: Dict[Tuple[int, int], List[dict]]
+                       ) -> Dict[str, Any]:
+    """Straggler gauge from per-rank goodput streams: for every step that
+    more than one rank reported, the spread (max − min) across ranks of the
+    step's *completion* time (``t_start + dur_s``, ``time.monotonic`` —
+    comparable across processes on one host). A persistently large skew
+    means one rank finishes its step late every iteration and the others
+    burn that time waiting in the gradient collective."""
+    by_step: Dict[Tuple[int, int], Dict[int, float]] = {}
+    for (attempt, rank), evs in rank_events.items():
+        for e in evs:
+            if e.get("bucket") != "step" or "step" not in e:
+                continue
+            if "t_start" not in e or "dur_s" not in e:
+                continue
+            by_step.setdefault((attempt, e["step"]), {})[rank] = (
+                e["t_start"] + e["dur_s"])
+    skews: Dict[Tuple[int, int], float] = {
+        key: max(by_rank.values()) - min(by_rank.values())
+        for key, by_rank in by_step.items() if len(by_rank) > 1}
+    if not skews:
+        return {"num_steps": 0, "max_skew_s": 0.0, "mean_skew_s": 0.0,
+                "max_skew_step": None}
+    worst = max(skews, key=skews.get)
+    return {
+        "num_steps": len(skews),
+        "max_skew_s": skews[worst],
+        "mean_skew_s": sum(skews.values()) / len(skews),
+        "max_skew_step": worst[1],
+    }
 
 
 @dataclasses.dataclass
@@ -250,7 +283,8 @@ class FleetSupervisor:
                  "repro.launch.distributed:build_tiny_fleet_config",
                  builder_kwargs: Optional[dict] = None,
                  collective_timeout_s: float = 20.0,
-                 max_restarts: int = 8):
+                 max_restarts: int = 8,
+                 trace: bool = False):
         if not schedule:
             raise ValueError("schedule needs at least one world size")
         self.workdir = workdir
@@ -261,6 +295,9 @@ class FleetSupervisor:
         self.builder_kwargs = dict(builder_kwargs or {})
         self.collective_timeout_s = collective_timeout_s
         self.max_restarts = max_restarts
+        # trace=True arms per-rank Chrome traces (pid lane = rank) and
+        # merges them into <workdir>/trace.json when the fleet completes.
+        self.trace = trace
         self.checkpoint_dir = os.path.join(workdir, "ckpt")
         os.makedirs(self.checkpoint_dir, exist_ok=True)
 
@@ -298,7 +335,9 @@ class FleetSupervisor:
                 checkpoint_dir=self.checkpoint_dir,
                 result=self._result_path(attempt, rank),
                 steps=self.steps,
-                collective_timeout_s=self.collective_timeout_s, **kw)
+                collective_timeout_s=self.collective_timeout_s,
+                trace=self._trace_path(attempt, rank) if self.trace else "",
+                **kw)
             procs.append(subprocess.Popen(
                 argv, env=env, stdout=subprocess.DEVNULL,
                 stderr=subprocess.DEVNULL))
@@ -306,6 +345,28 @@ class FleetSupervisor:
 
     def _result_path(self, attempt: int, rank: int) -> str:
         return os.path.join(self.workdir, f"a{attempt}_r{rank}.jsonl")
+
+    def _trace_path(self, attempt: int, rank: int) -> str:
+        return os.path.join(self.workdir, f"a{attempt}_r{rank}_trace.json")
+
+    def _merge_traces(self, num_attempts: int) -> Optional[str]:
+        """Merge every per-rank trace written so far into one fleet trace
+        (one pid lane per rank; a rank that died and came back continues on
+        the same lane — SIGKILLed attempts may have no file to merge)."""
+        from repro.observability.tracing import merge_traces
+
+        paths = []
+        for attempt in range(num_attempts):
+            world = self.schedule[min(attempt, len(self.schedule) - 1)]
+            for rank in range(world):
+                p = self._trace_path(attempt, rank)
+                if os.path.exists(p):
+                    paths.append(p)
+        if not paths:
+            return None
+        out = os.path.join(self.workdir, "trace.json")
+        merge_traces(paths, out_path=out)
+        return out
 
     def _babysit(self, procs: List[subprocess.Popen]) -> List[int]:
         """Waits the attempt out. A non-(0|143) exit is a crash: survivors
@@ -421,6 +482,9 @@ class FleetSupervisor:
                     "goodput": goodput,
                     "input_state": input_state,
                     "finals": finals,
+                    "straggler": step_boundary_skew(rank_events),
+                    "trace_path": (self._merge_traces(attempt + 1)
+                                   if self.trace else None),
                 }
             attempt += 1
             if attempt - 1 >= self.max_restarts:

@@ -12,7 +12,11 @@ generated token.
 
 Telemetry (:meth:`metrics`) reports queue depth, KV page utilization,
 completed/preempted counts, output tokens/s, and p50/p99 TTFT and TPOT —
-the Table-4 metrics at serving granularity.
+the Table-4 metrics at serving granularity. Latency percentiles come from
+the observability registry's bounded reservoirs (recorded once per request
+at completion), so gateway memory stays O(reservoir + in-flight), not
+O(requests served): finished results past the scheduler's retention cap
+are retired together with their token queues.
 """
 
 from __future__ import annotations
@@ -20,11 +24,13 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Any, Callable, Dict, Iterator, List, Optional
+from typing import Any, Callable, Dict, Iterator, Optional
 
 import numpy as np
 
 from repro.inference.engine import GenerationResult, InferenceEngine
+from repro.observability.metrics import MetricsRegistry
+from repro.observability.runtime import Observability
 from repro.serving.scheduler import Scheduler, ServeRequest
 
 __all__ = ["SamplingParams", "ServingGateway"]
@@ -45,13 +51,30 @@ class ServingGateway:
     """Non-blocking request gateway over a loaded :class:`InferenceEngine`."""
 
     def __init__(self, engine: InferenceEngine, *, prefill_chunk: int = 16,
-                 seed: int = 0):
-        self.scheduler = Scheduler(engine, prefill_chunk=prefill_chunk,
-                                   seed=seed)
+                 seed: int = 0,
+                 observability: Optional[Observability] = None,
+                 max_done_results: int = 4096):
+        # The gateway always has a registry (its latency reservoirs need
+        # one); passing an Observability bundle additionally routes the
+        # metrics into its sinks and arms request-lifecycle tracing.
+        self.observability = observability
+        self.registry: MetricsRegistry = (
+            observability.registry if observability is not None
+            else MetricsRegistry())
+        self.scheduler = Scheduler(
+            engine, prefill_chunk=prefill_chunk, seed=seed,
+            registry=self.registry,
+            tracer=observability.tracer if observability is not None else None,
+            max_done_results=max_done_results, on_retire=self._retire)
         self._next_id = 0
         self._queues: Dict[int, deque] = {}
         self._t0 = time.perf_counter()
         self._tokens_out = 0
+
+    def _retire(self, request_id: int):
+        """Scheduler evicted this finished result (retention cap): drop the
+        matching token queue so gateway state stays bounded too."""
+        self._queues.pop(request_id, None)
 
     # ------------------------------------------------------------ lifecycle
 
@@ -123,23 +146,13 @@ class ServingGateway:
     # ------------------------------------------------------------ telemetry
 
     def metrics(self) -> Dict[str, Any]:
-        """Serving telemetry: queue/pool state plus latency percentiles over
-        completed requests."""
+        """Serving telemetry: queue/pool state plus latency percentiles from
+        the registry's bounded reservoirs (timed-out requests never enter
+        them — their "latency" is the deadline, not a service time)."""
         sched = self.scheduler
-        ttfts: List[float] = []
-        tpots: List[float] = []
-        for rid in list(self._queues):
-            res = sched.result(rid)
-            # Timed-out requests are excluded from the latency percentiles
-            # (their "latency" is the deadline, not a service time).
-            if res is not None and not res.timed_out:
-                ttfts.append(res.ttft_s)
-                tpots.append(res.tpot_s)
         wall = max(time.perf_counter() - self._t0, 1e-9)
-
-        def pct(xs, p):
-            return float(np.percentile(xs, p)) if xs else 0.0
-
+        ttft = self.registry.histogram("serving/ttft_s")
+        tpot = self.registry.histogram("serving/tpot_s")
         return {
             "queue_depth": sched.queue_depth,
             "running": sum(s is not None for s in sched._slot_seq),
@@ -153,8 +166,8 @@ class ServingGateway:
             "max_concurrent": sched.stats["max_concurrent"],
             "tokens_out": self._tokens_out,
             "tokens_per_s": self._tokens_out / wall,
-            "ttft_p50_s": pct(ttfts, 50),
-            "ttft_p99_s": pct(ttfts, 99),
-            "tpot_p50_s": pct(tpots, 50),
-            "tpot_p99_s": pct(tpots, 99),
+            "ttft_p50_s": ttft.percentile(50),
+            "ttft_p99_s": ttft.percentile(99),
+            "tpot_p50_s": tpot.percentile(50),
+            "tpot_p99_s": tpot.percentile(99),
         }

@@ -36,6 +36,7 @@ loop with page logic inert.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Any, Callable, Dict, List, Optional
@@ -46,6 +47,8 @@ import numpy as np
 
 from repro.core.module import functional
 from repro.inference.engine import GenerationResult, InferenceEngine
+from repro.observability.metrics import MetricsRegistry
+from repro.observability.tracing import Tracer
 from repro.serving.paged_cache import BlockAllocator, PagedCacheManager
 
 __all__ = ["ServeRequest", "Scheduler"]
@@ -93,6 +96,7 @@ class _Seq:
     n_preempt: int = 0
     timed_out: bool = False
     t_submit: float = 0.0
+    t_admit: float = 0.0  # first admission to a slot (prefill start)
     t_first: float = 0.0
     t_done: float = 0.0
 
@@ -115,7 +119,11 @@ class Scheduler:
     """
 
     def __init__(self, engine: InferenceEngine, *, prefill_chunk: int = 16,
-                 seed: int = 0):
+                 seed: int = 0,
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None,
+                 max_done_results: int = 4096,
+                 on_retire: Optional[Callable[[int], None]] = None):
         assert engine._params is not None, "engine.load(params) first"
         if prefill_chunk < 1 or prefill_chunk & (prefill_chunk - 1):
             raise ValueError(f"prefill_chunk must be a power of two, "
@@ -124,6 +132,23 @@ class Scheduler:
         self.prefill_chunk = prefill_chunk
         self.slots = engine.config.slots
         self._key = jax.random.PRNGKey(seed)
+        # Telemetry: latency reservoirs + lifecycle spans. `registry` keeps
+        # TTFT/TPOT in bounded reservoirs (the unbounded-list fix);
+        # `tracer` emits queued -> prefill -> decode spans per request on a
+        # tid = request_id lane. `max_done_results` bounds the retained
+        # result map — the oldest finished result is retired (and
+        # `on_retire(request_id)` told) once the cap is exceeded.
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.tracer = tracer
+        if max_done_results < 1:
+            raise ValueError(
+                f"max_done_results must be >= 1, got {max_done_results}")
+        self.max_done_results = max_done_results
+        self._on_retire = on_retire
+        # Offset mapping the perf_counter stamps on _Seq onto the tracer's
+        # wall-clock timebase, so request lifecycle spans land on the same
+        # axis as live spans and merged fleet traces.
+        self._clock_offset = time.time() - time.perf_counter()
 
         if engine.uses_paged_cache():
             from repro.core.config import visit_config
@@ -271,6 +296,8 @@ class Scheduler:
         seq.slot = slot
         seq.state = _PREFILL
         seq.prefill_done = 0
+        if seq.t_admit == 0.0:
+            seq.t_admit = time.perf_counter()
         if self.manager.is_paged:
             seq.table_row = np.full(self.manager.n_logical, -1, np.int64)
         # Recycled slot: restore pristine rows (zero recurrent state, empty
@@ -357,6 +384,45 @@ class Scheduler:
             self.stats["completed"] += 1
         if truncated:
             self.stats["truncated"] += 1
+        self._record_lifecycle(seq)
+        # Bounded result retention: FIFO-retire the oldest finished result
+        # (dict preserves insertion = completion order).
+        while len(self._done) > self.max_done_results:
+            rid, _ = next(iter(self._done.items()))
+            del self._done[rid]
+            if self._on_retire is not None:
+                self._on_retire(rid)
+
+    def _record_lifecycle(self, seq: _Seq):
+        """Latency reservoirs + queued→prefill→decode spans for a finished
+        request (timed-out requests get spans but no latency samples —
+        their 'latency' is the deadline, not a service time)."""
+        n = len(seq.tokens)
+        if not seq.timed_out:
+            if n:
+                self.registry.histogram("serving/ttft_s").record(
+                    max(seq.t_first - seq.t_submit, 0.0))
+            if n > 1:
+                self.registry.histogram("serving/tpot_s").record(
+                    max(seq.t_done - seq.t_first, 0.0) / (n - 1))
+        if self.tracer is None:
+            return
+        rid = seq.req.request_id
+        off = self._clock_offset
+        self.tracer.set_thread_name(rid, f"req {rid}")
+        t_admit = seq.t_admit or seq.t_done
+        self.tracer.add_span("queued", seq.t_submit + off, t_admit + off,
+                             tid=rid, request_id=rid, priority=seq.req.priority)
+        t_first = seq.t_first or seq.t_done
+        self.tracer.add_span("prefill", t_admit + off, t_first + off,
+                             tid=rid, request_id=rid,
+                             prompt_len=len(seq.req.prompt),
+                             preemptions=seq.n_preempt)
+        if n > 1:
+            self.tracer.add_span("decode", t_first + off, seq.t_done + off,
+                                 tid=rid, request_id=rid, tokens=n)
+        self.tracer.instant("done", tid=rid, request_id=rid,
+                            timed_out=seq.timed_out)
 
     def _time_out(self, seq: _Seq):
         """Cancel a deadline-expired sequence wherever it is in its
@@ -459,9 +525,13 @@ class Scheduler:
             return  # pool dry and nobody to evict: retry next iteration
         ids = jnp.asarray(prompt[seq.prefill_done:seq.prefill_done + c]
                           )[None, :]
-        self._cache, logits = self._chunk_fn(c)(
-            self.engine._params, self._cache, ids,
-            jnp.asarray(seq.slot, jnp.int32))
+        span = (self.tracer.span("prefill_chunk", chunk=c,
+                                 request_id=seq.req.request_id)
+                if self.tracer is not None else contextlib.nullcontext())
+        with span:
+            self._cache, logits = self._chunk_fn(c)(
+                self.engine._params, self._cache, ids,
+                jnp.asarray(seq.slot, jnp.int32))
         seq.prefill_done += c
         self.stats["prefill_chunks"] += 1
         if seq.prefill_done == len(prompt):
@@ -502,10 +572,14 @@ class Scheduler:
             temps[seq.slot] = seq.req.temperature
             topks[seq.slot] = seq.req.top_k
             active[seq.slot] = True
-        self._cache, toks, self._key = self._decode_fn()(
-            self.engine._params, self._cache, jnp.asarray(last), self._key,
-            jnp.asarray(temps), jnp.asarray(topks), jnp.asarray(active))
-        toks = np.asarray(toks)
+        span = (self.tracer.span("decode_step", batch=len(running))
+                if self.tracer is not None else contextlib.nullcontext())
+        with span:
+            self._cache, toks, self._key = self._decode_fn()(
+                self.engine._params, self._cache, jnp.asarray(last),
+                self._key, jnp.asarray(temps), jnp.asarray(topks),
+                jnp.asarray(active))
+            toks = np.asarray(toks)
         self.stats["decode_steps"] += 1
         for seq in running:
             tok = int(toks[seq.slot])
@@ -522,6 +596,21 @@ class Scheduler:
         self._fill_slots()
         self._prefill_one()
         self._decode_step()
+        # Per-iteration gauges (dict updates — no sink I/O on the hot path).
+        reg = self.registry
+        reg.gauge("serving/queue_depth").set(float(self.queue_depth))
+        reg.gauge("serving/running").set(
+            float(sum(s is not None for s in self._slot_seq)))
+        if self.allocator is not None:
+            reg.gauge("serving/page_pool_utilization").set(
+                self.block_utilization)
+            reg.gauge("serving/page_pool_free").set(
+                float(self.allocator.num_free))
+        if self.tracer is not None:
+            self.tracer.counter("queue_depth", self.queue_depth)
+            if self.allocator is not None:
+                self.tracer.counter("page_pool_utilization",
+                                    self.block_utilization)
         return self.has_work
 
     # ----------------------------------------------------------- batch API

@@ -34,6 +34,7 @@ from repro.layers.base import ParameterSpec
 from repro.trainer.learner import aggregate_aux_losses
 
 __all__ = [
+    "scalar_summaries",
     "make_loss_fn",
     "make_grad_fn",
     "build_train_step",
@@ -104,9 +105,28 @@ def constrain_tree(tree: Any, specs: Optional[Any]) -> Any:
 # ---------------------------------------------------------------------------
 
 
+def scalar_summaries(col) -> Dict[str, Any]:
+    """The exportable slice of an ``OutputCollection``: scalar summaries
+    (loss/accuracy, MoE load-balance stats, per-layer norms) keyed by module
+    path. Non-scalar summaries (activation histograms etc.) stay in the
+    collection for callers that want them — routing tensors out of every
+    step would bloat the jitted step's outputs for no telemetry gain."""
+    out = {}
+    for k, v in col.summaries.items():
+        if isinstance(v, (int, float)) or getattr(v, "shape", None) == ():
+            out[k] = v
+    return out
+
+
 def make_loss_fn(model, *, aux_loss_weight: float = 1.0,
                  aux_loss_pattern: str = r".*/aux_loss$") -> Callable:
-    """(params, batch, step_key) -> (total_loss, {"loss", "aux_loss"})."""
+    """(params, batch, step_key) -> (total_loss, {"loss", "aux_loss",
+    "summaries"}).
+
+    ``summaries`` routes every scalar ``add_summary`` value out of the
+    jitted step (they used to be collected into the OutputCollection and
+    dropped) so the trainer can export them through the metrics registry.
+    """
 
     def loss_fn(params, batch, step_key):
         (loss, _aux), col = functional(
@@ -114,7 +134,8 @@ def make_loss_fn(model, *, aux_loss_weight: float = 1.0,
             is_training=True)
         aux_total = aggregate_aux_losses(col, aux_loss_pattern)
         total = loss + aux_loss_weight * aux_total
-        return total, {"loss": loss, "aux_loss": aux_total}
+        return total, {"loss": loss, "aux_loss": aux_total,
+                       "summaries": scalar_summaries(col)}
 
     return loss_fn
 
@@ -169,25 +190,26 @@ def make_grad_fn(loss_fn: Callable, *, grad_accum_steps: int = 1,
 
         split, static = _split_batch(batch, accum)
 
-        def microbatch(carry, mb):
-            acc_grads, acc_total, acc_loss, acc_aux = carry
+        def microbatch(acc_grads, mb):
             mb_key = jax.random.fold_in(step_key, mb["_idx"])
             mb_batch = {k: v for k, v in mb.items() if k != "_idx"}
             mb_batch.update(static)
             (total, parts), grads = grad_fn(params, mb_batch, mb_key)
             acc_grads = jax.tree.map(
                 lambda a, g: a + g.astype(a.dtype), acc_grads, grads)
-            return (acc_grads, acc_total + total, acc_loss + parts["loss"],
-                    acc_aux + parts["aux_loss"]), None
+            # Scalar metrics (incl. the routed summaries subtree) ride as
+            # scan outputs and are averaged over microbatches below.
+            return acc_grads, {"_total": total, **parts}
 
         split["_idx"] = jnp.arange(accum)
         zero_grads = jax.tree.map(
             lambda p: jnp.zeros(p.shape, grad_dtype or p.dtype), params)
-        (grads, total, loss, aux), _ = jax.lax.scan(
-            microbatch, (zero_grads, 0.0, 0.0, 0.0), split)
+        grads, parts_stack = jax.lax.scan(microbatch, zero_grads, split)
         inv = 1.0 / accum
         grads = jax.tree.map(lambda g: g * jnp.asarray(inv, g.dtype), grads)
-        return total * inv, {"loss": loss * inv, "aux_loss": aux * inv}, grads
+        parts = jax.tree.map(lambda x: jnp.mean(x, axis=0), parts_stack)
+        total = parts.pop("_total")
+        return total, parts, grads
 
     return compute_grads
 
@@ -299,9 +321,17 @@ def build_train_step(
             grads, state["opt_state"], state["params"],
             update_partition_specs=update_partition_specs,
             param_partition_specs=param_partition_specs)
+        # Norm telemetry: grad/param/update norms are the first things a
+        # diverging run's operator looks at, so they come out of every step
+        # (computed inside jit — no extra dispatches, no retraces).
+        update = jax.tree.map(
+            lambda n, o: n.astype(jnp.float32) - o.astype(jnp.float32),
+            new_params, state["params"])
         metrics = {
             "total_loss": total,
             "grad_norm": global_norm(grads),
+            "param_norm": global_norm(new_params),
+            "update_norm": global_norm(update),
             **parts,
         }
         new_state = {

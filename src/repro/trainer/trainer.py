@@ -18,6 +18,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer, CheckpointWriteError
+from repro.observability.hardware import compiled_cost, device_memory_stats, estimate_mfu
+from repro.observability.runtime import ObservabilityConfig, build_observability
 from repro.runtime.goodput import GoodputMonitor
 from repro.runtime.signals import Preempted
 from repro.core.config import REQUIRED, ConfigBase, Required, config_class
@@ -50,6 +52,20 @@ TrainState = Dict[str, Any]  # {"step", "prng_key", "params", "opt_state"}
 
 class WatchdogTimeout(RuntimeError):
     """A training step exceeded the configured watchdog timeout (§5)."""
+
+
+def _flatten_metrics(metrics: Dict[str, Any]) -> Dict[str, float]:
+    """Step metrics -> flat {name: float}. Nested dicts (the routed
+    ``summaries`` subtree) flatten as ``summaries/<module-path>``. Forces a
+    host transfer, so call only at the logging cadence."""
+    flat: Dict[str, float] = {}
+    for k, v in metrics.items():
+        if isinstance(v, dict):
+            for sk, sv in v.items():
+                flat[f"{k}/{sk}"] = float(sv)
+        else:
+            flat[k] = float(v)
+    return flat
 
 
 def opt_state_shardings(opt_state_shapes: Any, params_structure,
@@ -127,6 +143,10 @@ class SpmdTrainer(Module):
         # Optimizer-state host offload (TPU feature; see DESIGN.md for the
         # CPU dry-run substitution).
         offload_optimizer_state: bool = False
+        # Unified observability (repro.observability): metrics registry +
+        # JSONL sink, Chrome trace spans per step phase, MFU/memory gauges,
+        # on-demand profiler window. None = zero instrumentation.
+        observability: Optional[ObservabilityConfig] = None
         # Runtime resiliency (paper §5).
         watchdog_timeout_s: Optional[float] = None
         # "warn" prints; "raise" raises WatchdogTimeout at the next
@@ -145,6 +165,12 @@ class SpmdTrainer(Module):
         self._mesh = None
         self._jit_step = None
         self._step_has_run = False
+        # Telemetry bundle (engine-cached like the jitted step: one registry
+        # / tracer / profiler across warm restarts on this instance).
+        self.observability = build_observability(cfg.observability)
+        self._step_cost = None
+        self._mem_stats_unavailable = False
+        self._lower_shapes = None
         # Set by a SIGTERM handler (see launch/train.py) or the supervisor's
         # fault injection; the loop polls it at each step boundary, takes a
         # synchronous emergency checkpoint, and raises Preempted.
@@ -395,6 +421,41 @@ class SpmdTrainer(Module):
 
         return elastic_step
 
+    # ---------------------------------------------------------- hardware cost
+
+    @no_context
+    def step_cost_analysis(self) -> Dict[str, Any]:
+        """XLA's own analysis of the compiled train step: ``flops`` (the
+        MFU numerator), ``bytes_accessed``, and ``peak_hbm_proxy_bytes``
+        (argument + temp + output bytes of the executable).
+
+        Memoized per trainer; the one extra lower+compile happens off the
+        step path (first logging step, or on demand from the bench).
+        Returns ``{}`` before the step is built and for the elastic
+        multi-process step (not a single jitted program).
+        """
+        if self._step_cost is not None:
+            return self._step_cost
+        if (self.config.distributed is not None or self._jit_step is None
+                or self._lower_shapes is None):
+            return {}
+        state_shapes, batch_abs = self._lower_shapes
+        try:
+            compiled = self._jit_step.lower(state_shapes, batch_abs).compile()
+        except Exception:  # noqa: BLE001 — backend without AOT lowering
+            self._step_cost = {}
+            return self._step_cost
+        cost = compiled_cost(compiled)
+        try:
+            ma = compiled.memory_analysis()
+            cost["peak_hbm_proxy_bytes"] = int(
+                ma.argument_size_in_bytes + ma.temp_size_in_bytes
+                + ma.output_size_in_bytes)
+        except Exception:  # noqa: BLE001 — backend without memory_analysis
+            cost["peak_hbm_proxy_bytes"] = None
+        self._step_cost = cost
+        return cost
+
     # -------------------------------------------------------------------- run
 
     @no_context
@@ -413,12 +474,34 @@ class SpmdTrainer(Module):
         set, the loop takes a synchronous emergency checkpoint at the next
         step boundary and raises :class:`Preempted`.
         """
+        import contextlib
+
         cfg = self.config
         num_steps = num_steps or cfg.max_steps
+        obs = self.observability
+        registry = obs.registry if obs is not None else None
+        tracer = obs.tracer if obs is not None else None
         monitor = monitor if monitor is not None else GoodputMonitor()
+        if registry is not None and monitor._sink is None:
+            # The goodput monitor's event stream adopts the unified schema:
+            # every bucket exit lands in the registry's sinks as
+            # {"kind": "event", "name": "goodput/<bucket>", ...}.
+            monitor._sink = registry.goodput_sink()
+
+        @contextlib.contextmanager
+        def phase(name, **meta):
+            """One run phase: a goodput bucket, and (when tracing) a span
+            on this rank's timeline lane. Host-side only — zero retraces."""
+            if tracer is None:
+                with monitor.bucket(name, **meta):
+                    yield
+            else:
+                with monitor.bucket(name, **meta), tracer.span(name, **meta):
+                    yield
+
         mesh = self.build_mesh()
         with set_mesh(mesh):
-            with monitor.bucket("init"):
+            with phase("init"):
                 state = self.init_state()
                 state_shapes = jax.eval_shape(lambda: state)
                 shardings = self.state_shardings(state_shapes, mesh)
@@ -426,6 +509,12 @@ class SpmdTrainer(Module):
 
                 sample = self.input.make_batch(0)
                 batch_sh = self.batch_shardings(sample, mesh)
+                self._lower_shapes = (state_shapes, {
+                    k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                    for k, v in sample.items()})
+                tokens_per_step = int(getattr(
+                    sample.get("input_ids", sample.get("labels", None)),
+                    "size", 0))
             # The jitted step is engine-cached: repeated run() calls on one
             # trainer (warm restarts, resume-after-checkpoint) reuse the
             # compiled executable — the train step compiles exactly once.
@@ -446,7 +535,7 @@ class SpmdTrainer(Module):
             if cfg.checkpointer is not None:
                 latest = self.checkpointer.latest_step()
                 if latest is not None:
-                    with monitor.bucket("restore", step=latest):
+                    with phase("restore", step=latest):
                         state = self.checkpointer.restore(latest, like=state)
                         state = jax.device_put(state, shardings)
                         # Elastic mode uses the global-view input contract:
@@ -476,8 +565,8 @@ class SpmdTrainer(Module):
                     if self.preemption_event.is_set():
                         committed = False
                         if cfg.checkpointer is not None:
-                            with monitor.bucket("checkpoint_stall", step=step,
-                                                emergency=True):
+                            with phase("checkpoint_stall", step=step,
+                                       emergency=True):
                                 try:
                                     committed = self.checkpointer.emergency_save(
                                         step, state, aux={"input": it.state()}
@@ -490,31 +579,48 @@ class SpmdTrainer(Module):
                                     # shard and the short barrier timed out.
                                     print(f"[trainer] emergency save failed: {e}")
                         raise Preempted(step, committed=committed)
-                    with monitor.bucket("input_stall", step=step):
+                    with phase("input_stall", step=step):
                         batch = next(it)
                     batch = jax.device_put(batch, batch_sh)
                     watchdog.beat(step)
+                    if obs is not None:
+                        obs.profiler.on_step_start(step)
                     # The first invocation traces + XLA-compiles; attribute
                     # it to "compile" (it includes that one step's compute).
-                    with monitor.bucket(
-                            "compile" if not self._step_has_run else "step",
-                            step=step):
+                    warm = self._step_has_run
+                    t_step = time.perf_counter()
+                    with phase("compile" if not warm else "step", step=step):
                         state, metrics = step_fn(state, batch)
+                        if (not warm and obs is not None and obs.config.mfu
+                                and not cfg.distributed):
+                            # Pre-pay the MFU numerator's one extra AOT
+                            # lower+compile here, in the compile bucket —
+                            # never in a warm step (which must stay within
+                            # the <1% instrumentation budget).
+                            self.step_cost_analysis()
+                    step_dur = time.perf_counter() - t_step
                     self._step_has_run = True
+                    if obs is not None:
+                        obs.profiler.on_step_end(step)
                     if cfg.sdc_check_every_n and step % cfg.sdc_check_every_n == 0:
                         self._sdc_check(batch)
                     if step % cfg.log_every_n == 0 or step == num_steps - 1:
-                        m = {k: float(v) for k, v in metrics.items()}
+                        m = _flatten_metrics(metrics)
                         m["step"] = step
                         m["steps_per_s"] = (step - start_step + 1) / (time.time() - t0)
                         history.append(m)
                         last_metrics = m
+                        if registry is not None:
+                            self._export_step_metrics(
+                                registry, m, step,
+                                step_dur=step_dur if warm else None,
+                                tokens_per_step=tokens_per_step)
                     if (cfg.checkpointer is not None and cfg.checkpoint_every_n
                             and (step + 1) % cfg.checkpoint_every_n == 0):
                         # Async save: the training thread pays only the
                         # device-side snapshot (+ any still-in-flight save);
                         # staging and the write run in the background.
-                        with monitor.bucket("checkpoint_stall", step=step):
+                        with phase("checkpoint_stall", step=step):
                             self.checkpointer.save(
                                 step + 1, state, aux={"input": it.state()}
                                 if hasattr(it, "state") else None)
@@ -535,16 +641,70 @@ class SpmdTrainer(Module):
                 # supervisor attempt). cancel() does not check(): a pending
                 # WatchdogTimeout must not mask the in-flight exception.
                 watchdog.cancel()
+                # Telemetry survives every exit path: a preempted/crashed
+                # run still leaves its trace + flushed metrics behind.
+                if obs is not None:
+                    obs.profiler.close()
+                    registry.drain()
+                    obs.save_trace()
             watchdog.stop()
             if cfg.checkpointer is not None:
-                with monitor.bucket("checkpoint_stall", step=num_steps,
-                                    final_wait=True):
+                with phase("checkpoint_stall", step=num_steps,
+                           final_wait=True):
                     self.checkpointer.wait()
+            if obs is not None:
+                obs.save_trace()  # include the final-wait span
             return {"state": state, "history": history, "final": last_metrics,
                     "num_params": tree_param_count(state["params"]),
                     "input_state": it.state() if hasattr(it, "state") else None,
                     "goodput": monitor.summary(),
-                    "goodput_events": monitor.events}
+                    "goodput_events": monitor.events,
+                    "telemetry": obs.snapshot() if obs is not None else None,
+                    "step_cost": dict(self._step_cost or {})}
+
+    def _export_step_metrics(self, registry, m: Dict[str, float], step: int,
+                             *, step_dur: Optional[float] = None,
+                             tokens_per_step: int = 0):
+        """Routes one logging step's metrics into the registry: gauges keyed
+        ``train/<metric>`` and ``summaries/<module-path>`` (the values
+        modules ``add_summary``'d, routed out of the jitted step), plus
+        hardware gauges — per-step MFU from the compiled step's own cost
+        analysis, tokens/s/device, and ``device.memory_stats()`` where the
+        backend reports them (TPU/GPU peak HBM; empty on CPU)."""
+        obs = self.observability
+        for k, v in m.items():
+            if k == "step":
+                continue
+            name = k if k.startswith("summaries/") else f"train/{k}"
+            registry.gauge(name).set(v)
+        if step_dur and step_dur > 0:
+            registry.histogram("train/step_time_s").record(step_dur)
+            n_dev = int(np.prod(self.config.mesh_shape))
+            if tokens_per_step:
+                registry.gauge("train/tokens_per_s").set(
+                    tokens_per_step / step_dur)
+                registry.gauge("train/tokens_per_s_per_device").set(
+                    tokens_per_step / step_dur / n_dev)
+            if obs.config.mfu:
+                cost = self.step_cost_analysis()
+                mfu = estimate_mfu(
+                    cost.get("flops"), step_dur, num_devices=n_dev,
+                    peak_flops_per_device=obs.config.peak_flops_per_device)
+                if mfu is not None:
+                    registry.gauge("hardware/mfu").set(mfu)
+                if cost.get("flops"):
+                    registry.gauge("hardware/step_flops").set(cost["flops"])
+                if cost.get("peak_hbm_proxy_bytes"):
+                    registry.gauge("hardware/peak_hbm_proxy_bytes").set(
+                        cost["peak_hbm_proxy_bytes"])
+        if not self._mem_stats_unavailable:
+            stats = device_memory_stats()
+            # Backends without memory stats (CPU) answer {} every time —
+            # probe once, don't pay the query on every logging step.
+            self._mem_stats_unavailable = not stats
+            for k, v in stats.items():
+                registry.gauge(f"hardware/memory/{k}").set(v)
+        registry.flush()
 
     def _sdc_check(self, batch):
         """Paper §5: repeat a computation and compare for silent corruption."""
