@@ -45,7 +45,7 @@ from repro.core.config import REQUIRED, ConfigBase, Required, config_class, visi
 from repro.core.module import Module, functional, no_context
 
 __all__ = ["InferenceEngine", "Request", "GenerationResult", "sample_tokens",
-           "sample_one"]
+           "sample_one", "greedy_verify"]
 
 # Smallest admission bucket: prompts pad up to the next power of two >= this.
 _MIN_BUCKET = 8
@@ -81,6 +81,28 @@ def sample_one(logits: jax.Array, key: jax.Array, temperature: float,
                         jnp.asarray([temperature], jnp.float32),
                         jnp.asarray([top_k], jnp.int32))
     return int(tok[0]), key
+
+
+def greedy_verify(logits: jax.Array, draft: jax.Array,
+                  n_draft: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Greedy speculative-decoding acceptance rule (device-side).
+
+    ``logits`` (K+1, V) are the model's outputs over the verify window
+    ``[t_last, d_1 .. d_K]`` — position i's logits are the model's
+    prediction for the token *after* d_i. ``draft`` (K,) holds the
+    proposed tokens (entries past ``n_draft`` are ignored). Returns
+    ``(tokens, n_accept)``: ``tokens`` (K+1,) is the greedy argmax at
+    every position and ``n_accept`` the length of the longest draft
+    prefix the model agrees with. Committing ``tokens[:n_accept + 1]``
+    — the accepted drafts plus the model's own correction/extension —
+    reproduces token-by-token greedy decoding exactly: each accepted
+    token is by construction the argmax given all tokens before it.
+    """
+    g = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    k = draft.shape[0]
+    ok = (g[:k] == draft) & (jnp.arange(k) < n_draft)
+    n_accept = jnp.sum(jnp.cumprod(ok.astype(jnp.int32)))
+    return g, n_accept.astype(jnp.int32)
 
 
 @dataclasses.dataclass

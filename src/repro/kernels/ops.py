@@ -153,6 +153,10 @@ def decode_attention(
         paged=page_tables is not None,
         sliding_window=sliding_window is not None,
         replicated_cache=replicated_cache,
+        # Chunked-prefill / speculative verify windows (S' > 1) resolve
+        # separately from 1-token decode steps: the query dim is a real
+        # matmul dim there, so backends may tile it differently.
+        multi_query=q.shape[1] > 1,
     )
     spec = registry.resolve_backend("attention.decode", feats, kernel)
     return spec.fn(

@@ -144,15 +144,21 @@ class KernelFeatures:
     sliding_window: bool = False
     # KV cache is replicated / unsharded across the mesh (decode ops).
     replicated_cache: bool = True
+    # S' > 1 query into the decode op: a chunked-prefill or speculative
+    # draft-verify window rather than a 1-token step. Lets backends pick
+    # different tiling (the query dim becomes a real matmul dim) and lets
+    # the dispatch cache keep verify- and decode-shaped resolutions apart.
+    multi_query: bool = False
 
     def __post_init__(self):
         # Hash once at construction: dispatch-cache lookups are on the
-        # trace hot path and must not re-hash 10 fields per call (<1µs
+        # trace hot path and must not re-hash 11 fields per call (<1µs
         # amortized resolve budget, see bench_kernels).
         object.__setattr__(self, "_hash", hash((
             self.platform, self.dtype, self.interpret, self.explicit,
             self.needs_grad, self.ragged_positions, self.single_query,
-            self.paged, self.sliding_window, self.replicated_cache)))
+            self.paged, self.sliding_window, self.replicated_cache,
+            self.multi_query)))
 
     def __hash__(self):  # noqa: D105 — dataclass respects explicit __hash__
         return self._hash

@@ -7,23 +7,30 @@ is a *config knob* on attention), and this package adds the resource
 management above it — the way Orca-style iteration-level scheduling and
 vLLM-style paging decouple serving throughput from model code.
 
-  * :mod:`repro.serving.paged_cache` — fixed-size page pool allocator and
-    host-side manipulation of paged cache pytrees (page tables, eviction
-    to host memory, restore by re-splicing pages).
+  * :mod:`repro.serving.paged_cache` — refcounted page pool allocator,
+    the shared-prefix :class:`PrefixIndex`, and host-side manipulation of
+    paged cache pytrees (page tables, copy-on-write forks, eviction to
+    host memory, restore by re-splicing pages).
   * :mod:`repro.serving.scheduler` — the iteration-level loop: priority
-    admission, chunked prefill interleaved with decode, preemption when
-    pages run out.
+    admission with prefix-cache reuse, chunked prefill interleaved with
+    decode, self-speculative draft-verify, preemption when pages run out.
+  * :mod:`repro.serving.draft` — the n-gram draft proposer feeding the
+    scheduler's speculative verify step.
   * :mod:`repro.serving.gateway` — non-blocking ``submit()/stream()`` API
     with per-request sampling params, token callbacks, and telemetry.
 """
 
+from repro.serving.draft import NgramProposer
 from repro.serving.gateway import SamplingParams, ServingGateway
-from repro.serving.paged_cache import BlockAllocator, PagedCacheManager
+from repro.serving.paged_cache import (BlockAllocator, PagedCacheManager,
+                                       PrefixIndex)
 from repro.serving.scheduler import ServeRequest, Scheduler
 
 __all__ = [
     "BlockAllocator",
+    "NgramProposer",
     "PagedCacheManager",
+    "PrefixIndex",
     "SamplingParams",
     "Scheduler",
     "ServeRequest",

@@ -1,0 +1,73 @@
+"""Self-speculative n-gram draft proposer ("prompt lookup" decoding).
+
+Drafting costs nothing but a dict lookup: language repeats itself, so the
+continuation of the current suffix n-gram has often already appeared in
+the sequence's own history (prompt + generated tokens). The proposer
+remembers, for every n-gram up to ``max_n``, where it last occurred — and
+the occurrence before that, so the current suffix never matches itself —
+and proposes the k tokens that followed the most recent prior occurrence.
+The scheduler verifies the whole draft in one multi-token dispatch;
+wrong drafts cost one wasted lane in a step that ran anyway, so even
+modest hit rates are pure TPOT profit.
+
+Updates are O(max_n) dict writes per token; proposing is O(max_n)
+lookups, longest n-gram first (longer context = higher acceptance).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+__all__ = ["NgramProposer"]
+
+
+class NgramProposer:
+    """Per-sequence draft proposer over the sequence's own token history."""
+
+    def __init__(self, max_n: int = 3):
+        if max_n < 1:
+            raise ValueError(f"max_n must be >= 1, got {max_n}")
+        self.max_n = max_n
+        self._hist: List[int] = []
+        # Per n-gram length: end position (index just past the gram) of its
+        # latest occurrence, and of the occurrence before that. Two levels
+        # are enough: a proposal only ever needs the latest occurrence
+        # *strictly before* the suffix itself.
+        self._last: List[Dict[Tuple[int, ...], int]] = [
+            {} for _ in range(max_n + 1)]
+        self._prev: List[Dict[Tuple[int, ...], int]] = [
+            {} for _ in range(max_n + 1)]
+
+    def __len__(self) -> int:
+        return len(self._hist)
+
+    def extend(self, tokens):
+        """Fold new history (prompt at submit, each token as emitted)."""
+        for t in tokens:
+            self._hist.append(int(t))
+            end = len(self._hist)
+            for n in range(1, self.max_n + 1):
+                if n > end:
+                    break
+                g = tuple(self._hist[end - n:])
+                old = self._last[n].get(g)
+                if old is not None:
+                    self._prev[n][g] = old
+                self._last[n][g] = end
+
+    def propose(self, k: int) -> List[int]:
+        """Up to ``k`` draft tokens continuing the current suffix from its
+        most recent prior occurrence; empty when history never repeats."""
+        if k < 1:
+            return []
+        hist = self._hist
+        end = len(hist)
+        for n in range(min(self.max_n, end), 0, -1):
+            g = tuple(hist[end - n:])
+            pos = self._last[n].get(g)
+            if pos == end:  # the suffix itself — use the occurrence before
+                pos = self._prev[n].get(g)
+            if pos is None or pos >= end:
+                continue
+            return hist[pos:pos + k]
+        return []

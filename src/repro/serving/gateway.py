@@ -53,7 +53,9 @@ class ServingGateway:
     def __init__(self, engine: InferenceEngine, *, prefill_chunk: int = 16,
                  seed: int = 0,
                  observability: Optional[Observability] = None,
-                 max_done_results: int = 4096):
+                 max_done_results: int = 4096,
+                 prefix_caching: bool = True, spec_k: int = 4,
+                 spec_ngram: int = 3):
         # The gateway always has a registry (its latency reservoirs need
         # one); passing an Observability bundle additionally routes the
         # metrics into its sinks and arms request-lifecycle tracing.
@@ -65,7 +67,9 @@ class ServingGateway:
             engine, prefill_chunk=prefill_chunk, seed=seed,
             registry=self.registry,
             tracer=observability.tracer if observability is not None else None,
-            max_done_results=max_done_results, on_retire=self._retire)
+            max_done_results=max_done_results, on_retire=self._retire,
+            prefix_caching=prefix_caching, spec_k=spec_k,
+            spec_ngram=spec_ngram)
         self._next_id = 0
         self._queues: Dict[int, deque] = {}
         self._t0 = time.perf_counter()
@@ -133,9 +137,17 @@ class ServingGateway:
 
     def drain(self) -> Dict[int, GenerationResult]:
         """Run the scheduler to idle; returns results for every request
-        completed so far, keyed by request id."""
+        completed so far, keyed by request id. With every result retired,
+        no KV page may still hold a reference — a nonzero count means a
+        refcount bug (a leak, or a missed decref on a shared prefix page),
+        so the drain fails loudly rather than serving on a shrinking pool."""
         while self.scheduler.step():
             pass
+        alloc = self.scheduler.allocator
+        if alloc is not None and alloc.num_in_use != 0:
+            raise RuntimeError(
+                f"KV page leak after drain: {alloc.num_in_use} pages still "
+                f"referenced with no sequence in flight")
         return {rid: self.scheduler.result(rid)
                 for rid in list(self._queues)
                 if self.scheduler.is_done(rid)}
@@ -164,6 +176,18 @@ class ServingGateway:
             "prefill_chunks": sched.stats["prefill_chunks"],
             "decode_steps": sched.stats["decode_steps"],
             "max_concurrent": sched.stats["max_concurrent"],
+            "prefix_hit_rate": sched.stats["prefix_hits"] / max(
+                sched.stats["prefix_hits"] + sched.stats["prefix_misses"], 1),
+            "prefill_tokens_skipped": sched.stats["prefill_tokens_skipped"],
+            "cow_forks": sched.stats["cow_forks"],
+            "drafted_tokens": sched.stats["drafted_tokens"],
+            "accepted_tokens": sched.stats["accepted_tokens"],
+            "verify_steps": sched.stats["verify_steps"],
+            # Tokens committed per verify dispatch: accepted drafts plus
+            # the model's own token. > 1 means speculation is paying.
+            "accepted_per_step": (
+                (sched.stats["accepted_tokens"] + sched.stats["verify_steps"])
+                / max(sched.stats["verify_steps"], 1)),
             "tokens_out": self._tokens_out,
             "tokens_per_s": self._tokens_out / wall,
             "ttft_p50_s": ttft.percentile(50),

@@ -28,10 +28,34 @@ Key mechanics:
   * **Per-slot sampling.** The fused decode step threads per-slot
     temperature/top-k arrays and a PRNG key, so mixed greedy/sampled
     requests batch together (greedy rows are exact argmax).
+  * **Shared-prefix caching.** On fully paged models, admission consults
+    a :class:`PrefixIndex` of published (immutable, fully written) prompt
+    pages: matched pages are increfed and mapped straight into the new
+    sequence's page table, so a repeated system prompt skips prefill
+    entirely. Divergence mid-page copy-on-write forks the partially
+    matched page *at admission* — before any fused step could write into
+    it — keeping shared pages strictly read-only. Evict, finish, and
+    deadline expiry decref (never hard-free), so one sharer's teardown
+    can't strand the others; pages decrefed to zero stay content-intact
+    on the free list and are revived on the next hit.
+  * **Self-speculative decoding.** Greedy sequences draft k tokens from
+    their own history (:class:`~repro.serving.draft.NgramProposer`); a
+    *batched verify* — one multi-token ``extend_step`` over ALL slots,
+    (S, k+1) — replaces the single-token decode whenever any slot has a
+    draft. Drafting rows commit their accepted prefix plus the model's
+    correction; sampled and draft-less rows ride the same dispatch
+    committing their usual one token, so speculation adds zero extra
+    dispatches per iteration. Rejected tails roll back by rewinding the
+    position counter (rejected KV entries self-heal: every position is
+    rewritten before any later query may attend to it). Output is
+    token-for-token identical to plain greedy.
 
 The scheduler is layout-agnostic: dense-cache models (and recurrent
 mixers, whose O(1) state bypasses paging entirely) run through the same
-loop with page logic inert.
+loop with page logic inert. Speculation gates itself off for recurrent
+state (which cannot roll back) and clamps its verify window so it can
+never wrap a dense or sliding-window KV ring; prefix caching requires a
+fully paged cache.
 """
 
 from __future__ import annotations
@@ -46,10 +70,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.module import functional
-from repro.inference.engine import GenerationResult, InferenceEngine
+from repro.inference.engine import (GenerationResult, InferenceEngine,
+                                    greedy_verify, sample_tokens)
 from repro.observability.metrics import MetricsRegistry
 from repro.observability.tracing import Tracer
-from repro.serving.paged_cache import BlockAllocator, PagedCacheManager
+from repro.serving.draft import NgramProposer
+from repro.serving.paged_cache import (BlockAllocator, PagedCacheManager,
+                                       PrefixIndex)
 
 __all__ = ["ServeRequest", "Scheduler"]
 
@@ -95,6 +122,23 @@ class _Seq:
     evicted_pages: Optional[List[Optional[np.ndarray]]] = None
     n_preempt: int = 0
     timed_out: bool = False
+    # Prefix caching: prompt tokens served from shared pages at admission,
+    # how many of this sequence's prompt pages are published to the index,
+    # and the chain hash after them (the publish cursor).
+    n_matched: int = 0
+    n_published: int = 0
+    chain_parent: int = 0
+    # Speculative decoding: per-sequence draft proposer + accounting.
+    # ``spec_backoff``/``spec_fails`` implement adaptive drafting: a
+    # fully rejected draft pauses drafting for exponentially growing
+    # windows (reset on any acceptance), so sequences whose output the
+    # n-gram proposer cannot predict fall back to plain-decode cost
+    # instead of paying the K+1-token verify every iteration.
+    proposer: Optional[NgramProposer] = None
+    n_drafted: int = 0
+    n_accepted: int = 0
+    spec_backoff: int = 0
+    spec_fails: int = 0
     t_submit: float = 0.0
     t_admit: float = 0.0  # first admission to a slot (prefill start)
     t_first: float = 0.0
@@ -123,7 +167,9 @@ class Scheduler:
                  registry: Optional[MetricsRegistry] = None,
                  tracer: Optional[Tracer] = None,
                  max_done_results: int = 4096,
-                 on_retire: Optional[Callable[[int], None]] = None):
+                 on_retire: Optional[Callable[[int], None]] = None,
+                 prefix_caching: bool = True, spec_k: int = 4,
+                 spec_ngram: int = 3):
         assert engine._params is not None, "engine.load(params) first"
         if prefill_chunk < 1 or prefill_chunk & (prefill_chunk - 1):
             raise ValueError(f"prefill_chunk must be a power of two, "
@@ -187,6 +233,32 @@ class Scheduler:
         # resets a recycled slot from these.
         self._zero_rows = self.manager.extract_slot(self._cache, 0)
 
+        # Feature gates, derived from what state the model actually keeps.
+        # Speculation rolls back by rewinding KV positions — recurrent
+        # mixers (Mamba/RWKV) consume tokens irreversibly, so any state
+        # leaf outside the attention contract disables drafting. Prefix
+        # sharing additionally needs every KV byte behind the page pools
+        # (dense ring rows are per-slot and cannot be shared).
+        names = {i.name for i in self.manager._info}
+        attn_leaves = {"k", "v", "pos", "k_pool", "v_pool", "pos_pool",
+                       "page_table", "index"}
+        self.spec_k = int(spec_k) if names <= attn_leaves else 0
+        self.spec_ngram = max(int(spec_ngram), 1)
+        # The verify window writes spec_k + 1 positions; none may wrap a
+        # dense (or sliding-window) KV ring, which would clobber history a
+        # rejected draft cannot give back. The tightest ring bounds it.
+        self._spec_write_limit = self.capacity_tokens
+        cache_leaves = jax.tree_util.tree_flatten(self._cache)[0]
+        for leaf, info in zip(cache_leaves, self.manager._info):
+            if info.name == "pos" and info.batch_axis >= 0:
+                self._spec_write_limit = min(self._spec_write_limit,
+                                             leaf.shape[info.batch_axis + 1])
+        self.prefix: Optional[PrefixIndex] = None
+        if (prefix_caching and self.manager.is_paged
+                and names <= {"k_pool", "v_pool", "pos_pool", "page_table",
+                              "index"}):
+            self.prefix = PrefixIndex(self.manager.page_size)
+
         self._slot_seq: List[Optional[_Seq]] = [None] * self.slots
         self._waiting: List[_Seq] = []
         self._preempted: List[_Seq] = []
@@ -195,6 +267,9 @@ class Scheduler:
             "admitted": 0, "completed": 0, "preemptions": 0, "restores": 0,
             "decode_steps": 0, "prefill_chunks": 0, "max_concurrent": 0,
             "truncated": 0, "timeouts": 0,
+            "prefix_hits": 0, "prefix_misses": 0,
+            "prefill_tokens_skipped": 0, "cow_forks": 0,
+            "drafted_tokens": 0, "accepted_tokens": 0, "verify_steps": 0,
         }
 
     # ------------------------------------------------------------- plumbing
@@ -233,6 +308,73 @@ class Scheduler:
         return self.engine._jit(("serve_chunk", c), self._chunk_fn_builder,
                                 donate_argnums=(1,))
 
+    def _spec_decode_fn_builder(self, K: int):
+        """(params, cache, ids (S, K+1), drafts (S, K), n_draft (S,), key,
+        temps (S,), topks (S,), active (S,))
+        -> (cache, tokens (S, K+1), n_accept (S,), key).
+
+        The batched verify step: ONE multi-token ``extend_step`` over all
+        slots replaces the fused single-token decode whenever any slot has
+        a draft. Drafting rows feed ``[t_last, d_1..d_k, pad]`` and commit
+        ``n_accept + 1`` tokens under :func:`greedy_verify`; sampled and
+        draft-less rows ride along with ``n_draft = 0`` — their position-0
+        logits are exactly the plain decode step's (later positions are
+        causally invisible to position 0), so they commit their usual one
+        token and the whole batch still costs a single dispatch. Inputs
+        past a row's draft are padding: their logits are unused and their
+        KV writes either land in unmapped pages (dropped) or are rewritten
+        before any later query can attend to them (``_spec_batch_safe``
+        guarantees no ring wrap). Rollback of each row's rejected tail is
+        just the position counter: ``extend_step`` advanced it by K+1, the
+        committed context is start + 1 + n_accept, so the ``index`` leaves
+        rewind by K - n_accept per slot; inactive rows keep their pre-step
+        per-slot state entirely, exactly like the plain decode step.
+        """
+        model = self.engine.model
+        axes = self._axes
+        names = [i.name for i in self.manager._info]
+        treedef = self.manager._treedef
+
+        def spec_decode(params, cache, ids, drafts, n_draft, key, temps,
+                        topks, active):
+            (new_cache, logits), _ = functional(
+                model, state=params,
+                inputs={"state": cache, "ids_step": ids},
+                method="extend_step")
+            toks, n_acc = jax.vmap(greedy_verify)(logits, drafts, n_draft)
+            key, sub = jax.random.split(key)
+            sampled = sample_tokens(logits[:, 0], sub, temps, topks)
+            toks = toks.at[:, 0].set(jnp.where(temps > 0, sampled,
+                                               toks[:, 0]))
+            n_acc = jnp.where((temps > 0) | ~active, 0, n_acc)
+            rollback = (K - n_acc).astype(jnp.int32)  # (S,) index rewind
+
+            def bcast(vec, leaf, ax):
+                shape = [1] * leaf.ndim
+                shape[ax] = vec.shape[0]
+                return vec.reshape(shape)
+
+            out = []
+            for new, old, ax, nm in zip(
+                    jax.tree_util.tree_flatten(new_cache)[0],
+                    jax.tree_util.tree_flatten(cache)[0],
+                    jax.tree_util.tree_flatten(axes)[0], names):
+                if ax < 0:
+                    out.append(new)  # shared pool: writes self-heal
+                    continue
+                if nm == "index":
+                    new = new - bcast(rollback, new, ax).astype(new.dtype)
+                out.append(jnp.where(bcast(active, new, ax), new, old))
+            cache = jax.tree_util.tree_unflatten(treedef, out)
+            return cache, toks, n_acc, key
+
+        return spec_decode
+
+    def _spec_decode_fn(self, K: int):
+        return self.engine._jit(("serve_spec_decode", K),
+                                lambda: self._spec_decode_fn_builder(K),
+                                donate_argnums=(1,))
+
     def _decode_fn(self):
         return self.engine._jit(
             "serve_decode_sampling",
@@ -253,6 +395,21 @@ class Scheduler:
     def _pages_needed(self, upto_tokens: int, have: int) -> int:
         return max(-(-upto_tokens // self.manager.page_size) - have, 0)
 
+    def _alloc_fresh(self, n: int) -> Optional[List[int]]:
+        """Allocate n pages as *fresh* storage: drop any prefix-index
+        entries naming them (their cached content is being recycled) and
+        invalidate their stale positions before they can be mapped — a
+        previous tenant's tokens must never reach a new sequence's mask.
+        Pages are reset lazily here, not at free time, precisely so that
+        freed pages keep servable content for future prefix hits."""
+        pages = self.allocator.alloc(n)
+        if pages is None:
+            return None
+        if self.prefix is not None:
+            self.prefix.forget_pages(pages)
+        self._cache = self.manager.reset_pages(self._cache, pages)
+        return pages
+
     def _try_alloc(self, seq: _Seq, upto_tokens: int) -> bool:
         """Ensure ``seq`` has pages mapped for the first ``upto_tokens``
         token positions, evicting lower-priority sequences if the pool runs
@@ -267,7 +424,7 @@ class Scheduler:
             if victim is None:
                 return False
             self._evict(victim)
-        new = self.allocator.alloc(n)
+        new = self._alloc_fresh(n)
         assert new is not None
         start = len(seq.pages)
         seq.pages.extend(new)
@@ -308,24 +465,115 @@ class Scheduler:
             self._cache = self.manager.write_table_row(self._cache, slot,
                                                        seq.table_row)
         self._slot_seq[slot] = seq
+        if self.prefix is not None:
+            self._match_prefix(seq)
         self.stats["admitted"] += 1
         # Device-resident concurrency (preempted sequences don't count).
         concurrent = sum(s is not None for s in self._slot_seq)
         self.stats["max_concurrent"] = max(self.stats["max_concurrent"],
                                            concurrent)
 
+    def _claim_page(self, page: int):
+        """Take a reference on a prefix-index page: another sharer if the
+        page is live, a revival off the free list if its last holder
+        already let go (cached-free content is still intact)."""
+        if self.allocator.refcount(page) > 0:
+            self.allocator.incref(page)
+        else:
+            self.allocator.revive(page)
+
+    def _cow_fork(self, seq: _Seq, donor: int, valid: int) -> Optional[int]:
+        """Copy-on-write: fork the partially matched ``donor`` page into a
+        private copy carrying only the shared ``valid`` token positions.
+        The fork happens at admission — before any fused step could write
+        this sequence's next position into the shared page — so published
+        pages stay strictly read-only. Returns the private page id, or
+        None if the pool can't supply the copy (caller drops the partial
+        match; the full-page prefix still stands). The caller already
+        holds a reference on ``donor``; it is released here either way."""
+        while self.allocator.num_free < 1:
+            victim = self._pick_victim(exclude=seq)
+            if victim is None:
+                self.allocator.decref(donor)
+                return None
+            self._evict(victim)
+        got = self._alloc_fresh(1)
+        assert got is not None
+        self._cache = self.manager.copy_page(self._cache, donor, got[0],
+                                             valid)
+        self.allocator.decref(donor)
+        self.stats["cow_forks"] += 1
+        return got[0]
+
+    def _match_prefix(self, seq: _Seq):
+        """Map the longest published prefix of the prompt into the
+        sequence's page table so those tokens skip prefill. At most
+        ``len(prompt) - 1`` tokens match — the final prompt token always
+        prefills so its next-token logits exist."""
+        full, chain, partial = self.prefix.match(seq.req.prompt)
+        claimed: List[int] = []
+        for p in full:
+            self._claim_page(p)
+            claimed.append(p)
+        matched = len(claimed) * self.manager.page_size
+        seq.chain_parent = chain
+        seq.n_published = len(full)
+        if partial is not None:
+            donor, j = partial
+            self._claim_page(donor)
+            forked = self._cow_fork(seq, donor, j)
+            if forked is not None:
+                claimed.append(forked)
+                matched += j
+        if not claimed:
+            self.stats["prefix_misses"] += 1
+            self.registry.counter("serving/prefix_cache_misses").inc()
+            return
+        seq.pages = claimed
+        for idx, p in enumerate(claimed):
+            seq.table_row[idx] = p
+        self._cache = self.manager.write_table_row(self._cache, seq.slot,
+                                                   seq.table_row)
+        # The decode position counter starts mid-stream: matched tokens
+        # are already in the cache.
+        self._cache = self.manager.set_index(self._cache, seq.slot, matched)
+        seq.prefill_done = matched
+        seq.n_matched = matched
+        self.stats["prefix_hits"] += 1
+        self.stats["prefill_tokens_skipped"] += matched
+        self.registry.counter("serving/prefix_cache_hits").inc()
+        self.registry.counter("serving/prefill_tokens_skipped").inc(matched)
+
+    def _publish_prefix(self, seq: _Seq):
+        """Publish this sequence's fully prefilled prompt pages to the
+        index. A page is publishable once every one of its token positions
+        holds prompt KV — after that it is immutable (decode writes only
+        at positions past the prompt) and safe to share."""
+        ps = self.manager.page_size
+        prompt = seq.req.prompt
+        covered = min(seq.prefill_done, len(prompt))
+        while ((seq.n_published + 1) * ps <= covered
+               and seq.n_published < len(seq.pages)):
+            i = seq.n_published
+            toks = tuple(int(t) for t in prompt[i * ps:(i + 1) * ps])
+            seq.chain_parent = self.prefix.publish(seq.chain_parent, toks,
+                                                   seq.pages[i])
+            seq.n_published += 1
+
     def _evict(self, seq: _Seq):
         """Preempt: page contents + per-slot rows move to host, pages and
-        the slot free up. Tokens stay exactly as generated so far."""
+        the slot free up. Tokens stay exactly as generated so far. Shared
+        prefix pages are decrefed, never freed — other sharers (and the
+        index) keep them; restore re-splices the host copy into fresh
+        private pages either way."""
         seq.evicted_rows = self.manager.extract_slot(self._cache, seq.slot)
         if seq.pages:
             seq.evicted_pages = self.manager.extract_pages(self._cache,
                                                            seq.pages)
-            self._cache = self.manager.reset_pages(self._cache, seq.pages)
             self._cache = self.manager.write_table_row(
                 self._cache, seq.slot,
                 np.full(self.manager.n_logical, -1, np.int64))
-            self.allocator.free(seq.pages)
+            self.allocator.decref_all(seq.pages)
         self._slot_seq[seq.slot] = None
         seq.slot = -1
         seq.state = _PREEMPTED
@@ -339,7 +587,7 @@ class Scheduler:
         n_pages = len(seq.pages)
         new_pages: List[int] = []
         if n_pages:
-            got = self.allocator.alloc(n_pages)
+            got = self._alloc_fresh(n_pages)
             if got is None:
                 return False
             new_pages = got
@@ -366,11 +614,15 @@ class Scheduler:
 
     def _finish(self, seq: _Seq, *, truncated: bool = False):
         if seq.pages:
-            self._cache = self.manager.reset_pages(self._cache, seq.pages)
-            self._cache = self.manager.write_table_row(
-                self._cache, seq.slot,
-                np.full(self.manager.n_logical, -1, np.int64))
-            self.allocator.free(seq.pages)
+            if seq.slot >= 0:
+                self._cache = self.manager.write_table_row(
+                    self._cache, seq.slot,
+                    np.full(self.manager.n_logical, -1, np.int64))
+            # decref, not free: other sequences may share prefix pages,
+            # and pages dropping to refcount 0 keep their contents on the
+            # free list for future prefix hits (reset happens lazily at
+            # the next allocation).
+            self.allocator.decref_all(seq.pages)
             seq.pages = []
         if seq.slot >= 0:
             self._slot_seq[seq.slot] = None
@@ -417,10 +669,13 @@ class Scheduler:
         self.tracer.add_span("prefill", t_admit + off, t_first + off,
                              tid=rid, request_id=rid,
                              prompt_len=len(seq.req.prompt),
-                             preemptions=seq.n_preempt)
+                             preemptions=seq.n_preempt,
+                             prefix_tokens_reused=seq.n_matched)
         if n > 1:
             self.tracer.add_span("decode", t_first + off, seq.t_done + off,
-                                 tid=rid, request_id=rid, tokens=n)
+                                 tid=rid, request_id=rid, tokens=n,
+                                 tokens_drafted=seq.n_drafted,
+                                 tokens_accepted=seq.n_accepted)
         self.tracer.instant("done", tid=rid, request_id=rid,
                             timed_out=seq.timed_out)
 
@@ -451,6 +706,8 @@ class Scheduler:
         if not seq.tokens:
             seq.t_first = time.perf_counter()
         seq.tokens.append(tok)
+        if seq.proposer is not None:
+            seq.proposer.extend([tok])
         if seq.req.on_token is not None:
             seq.req.on_token(seq.req.request_id, tok)
 
@@ -469,6 +726,11 @@ class Scheduler:
                 f"fallback in the paged layout)")
         seq = _Seq(req=dataclasses.replace(req, prompt=prompt))
         seq.t_submit = time.perf_counter()
+        # Drafting applies to greedy requests only (a sampled token is not
+        # predictable, so verification could never be exact).
+        if self.spec_k > 0 and req.temperature <= 0:
+            seq.proposer = NgramProposer(self.spec_ngram)
+            seq.proposer.extend(prompt)
         self._waiting.append(seq)
         self._waiting.sort(key=_Seq.sort_key)
 
@@ -534,6 +796,8 @@ class Scheduler:
                 jnp.asarray(seq.slot, jnp.int32))
         seq.prefill_done += c
         self.stats["prefill_chunks"] += 1
+        if self.prefix is not None:
+            self._publish_prefix(seq)
         if seq.prefill_done == len(prompt):
             tok = self._sample_first(seq, logits)
             self._emit(seq, tok)
@@ -543,25 +807,79 @@ class Scheduler:
             else:
                 seq.state = _RUNNING
 
+    def _spec_eligible(self, seq: _Seq) -> bool:
+        """Drafting applies to greedy sequences wanting >= 2 more tokens
+        whose whole padded verify window (spec_k + 1 positions) stays
+        inside capacity and every KV ring — writes past the budget (draft
+        padding) must never wrap."""
+        return (self.spec_k > 0 and seq.proposer is not None
+                and seq.req.max_new_tokens - len(seq.tokens) >= 2
+                and seq.ctx_len + self.spec_k + 1 <= self._spec_write_limit)
+
+    def _spec_batch_safe(self) -> bool:
+        """The batched K+1 verify writes spec_k + 1 positions at EVERY
+        slot — riding and even inactive (mid-prefill) rows included. That
+        is safe exactly when no slot's window can wrap a KV ring or run
+        off its page table: garbage-at-future-positions self-heals, but a
+        wrapped write clobbers history no rollback can give back. One slot
+        near its limit sends the whole iteration down the plain 1-token
+        decode instead."""
+        limit = self._spec_write_limit
+        for seq in self._slot_seq:
+            idx = 0 if seq is None else (
+                seq.prefill_done if seq.state == _PREFILL else seq.ctx_len)
+            if idx + self.spec_k + 1 > limit:
+                return False
+        return True
+
     def _decode_step(self):
         running = [s for s in self._slot_seq
                    if s is not None and s.state == _RUNNING]
         if not running:
             return
-        # Every running slot needs its next token's page mapped; one that
-        # can't get it (pool dry, outranked by everyone) is preempted
-        # itself rather than silently dropping KV writes.
+        # Draft pass (host-only): greedy sequences propose up to spec_k
+        # tokens from their own history. Committing n_accept + 1 tokens
+        # must not overshoot max_new_tokens, so drafts are clipped to
+        # remaining - 1. Proposing is stateless, so drafts dropped later
+        # (eviction, unsafe batch) simply regenerate next iteration.
+        drafts: Dict[int, List[int]] = {}
+        if self.spec_k > 0 and self._spec_batch_safe():
+            for seq in running:
+                if not self._spec_eligible(seq):
+                    continue
+                if seq.spec_backoff > 0:
+                    # Adaptive drafting: recently rejected wholesale, so
+                    # sit out this window at plain-decode cost.
+                    seq.spec_backoff -= 1
+                    continue
+                remaining = seq.req.max_new_tokens - len(seq.tokens)
+                d = seq.proposer.propose(self.spec_k)[:remaining - 1]
+                if d:
+                    drafts[seq.req.request_id] = d
+        # Every running slot needs pages mapped through its write window
+        # (next token, plus its draft if it has one); one that can't get
+        # them (pool dry, outranked by everyone) is preempted itself
+        # rather than silently dropping KV writes.
         for seq in list(running):
             if seq.state != _RUNNING:
                 continue  # evicted as an earlier sequence's victim
             if seq.ctx_len >= self.capacity_tokens and self.manager.is_paged:
                 self._finish(seq, truncated=True)
-            elif not self._try_alloc(seq, seq.ctx_len + 1):
+            elif not self._try_alloc(
+                    seq, seq.ctx_len + 1
+                    + len(drafts.get(seq.req.request_id, ()))):
                 self._evict(seq)
         # _try_alloc may have evicted sequences anywhere in the list.
         running = [s for s in running if s.state == _RUNNING]
         if not running:
             return
+        if any(s.req.request_id in drafts for s in running):
+            self._spec_decode_step(running, drafts)
+        else:
+            self._plain_decode_step(running)
+
+    def _plain_decode_step(self, running: List[_Seq]):
+        """The fused single-token decode over all running slots."""
         cfg = self.engine.config
         last = np.full((self.slots, 1), cfg.pad_token, np.int32)
         temps = np.zeros((self.slots,), np.float32)
@@ -587,6 +905,73 @@ class Scheduler:
             if (len(seq.tokens) >= seq.req.max_new_tokens
                     or tok == cfg.eos_token):
                 self._finish(seq)
+
+    def _spec_decode_step(self, running: List[_Seq],
+                          drafts: Dict[int, List[int]]):
+        """The batched draft-verify decode: one (S, K+1) dispatch commits
+        n_accept + 1 tokens per drafting row and exactly one token per
+        riding row — same iteration latency shape as the plain step, so
+        speculation never serializes per-sequence dispatches."""
+        K = self.spec_k
+        cfg = self.engine.config
+        S = self.slots
+        ids = np.full((S, K + 1), cfg.pad_token, np.int32)
+        dr = np.full((S, K), -1, np.int32)
+        nd = np.zeros((S,), np.int32)
+        temps = np.zeros((S,), np.float32)
+        topks = np.zeros((S,), np.int32)
+        active = np.zeros((S,), bool)
+        for seq in running:
+            ids[seq.slot, 0] = seq.tokens[-1]
+            d = drafts.get(seq.req.request_id, ())
+            ids[seq.slot, 1:1 + len(d)] = d
+            dr[seq.slot, :len(d)] = d
+            nd[seq.slot] = len(d)
+            temps[seq.slot] = seq.req.temperature
+            topks[seq.slot] = seq.req.top_k
+            active[seq.slot] = True
+        span = (self.tracer.span("spec_decode_step", batch=len(running),
+                                 drafted=int(nd.sum()))
+                if self.tracer is not None else contextlib.nullcontext())
+        with span:
+            self._cache, toks, n_acc, self._key = self._spec_decode_fn(K)(
+                self.engine._params, self._cache, jnp.asarray(ids),
+                jnp.asarray(dr), jnp.asarray(nd), self._key,
+                jnp.asarray(temps), jnp.asarray(topks), jnp.asarray(active))
+            toks = np.asarray(toks)
+            n_acc = np.asarray(n_acc)
+        self.stats["decode_steps"] += 1
+        for seq in running:
+            k_d = int(nd[seq.slot])
+            accepted = int(n_acc[seq.slot])
+            if k_d:
+                # verify_steps counts per-sequence verify events (not
+                # dispatches), so accepted_per_step stays "tokens
+                # committed per drafting sequence per step".
+                self.stats["verify_steps"] += 1
+                self.stats["drafted_tokens"] += k_d
+                self.stats["accepted_tokens"] += accepted
+                seq.n_drafted += k_d
+                seq.n_accepted += accepted
+                self.registry.histogram("serving/spec_acceptance").record(
+                    accepted / k_d)
+                if accepted:
+                    seq.spec_fails = 0
+                else:
+                    # Wholesale rejection: the proposer is guessing wrong
+                    # on this sequence, and the (S, K+1) verify costs
+                    # ~K+1x a plain step in FLOPs. Back off drafting for
+                    # an exponentially growing window (capped) so
+                    # unpredictable sequences decode at plain cost.
+                    seq.spec_fails += 1
+                    seq.spec_backoff = min(1 << seq.spec_fails, 32)
+            for t in toks[seq.slot, :accepted + 1]:
+                tok = int(t)
+                self._emit(seq, tok)
+                if (tok == cfg.eos_token
+                        or len(seq.tokens) >= seq.req.max_new_tokens):
+                    self._finish(seq)
+                    break
 
     def step(self) -> bool:
         """One scheduler iteration: expire deadlines, fill slots, one

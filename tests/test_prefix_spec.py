@@ -1,0 +1,366 @@
+"""Shared-prefix caching + self-speculative decoding on the paged
+serving stack: refcounted page sharing, copy-on-write divergence,
+evict/restore and deadline expiry of sharers, greedy spec-decoding
+exactness across cache layouts, and the compile-count guard for the
+batched verify program.
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.kernels import registry as kreg
+from repro.kernels.registry import DEFAULT_CONFIG, KernelFeatures
+from repro.serving import (
+    BlockAllocator,
+    NgramProposer,
+    PrefixIndex,
+    SamplingParams,
+    Scheduler,
+    ServeRequest,
+    ServingGateway,
+)
+from test_serving import _engine, _tiny_lm
+
+
+# ------------------------------ allocator refcounts --------------------------
+
+
+def test_allocator_refcount_lifecycle():
+    a = BlockAllocator(8)
+    (p,) = a.alloc(1)
+    assert a.refcount(p) == 1
+    a.incref(p)
+    assert a.refcount(p) == 2
+    assert a.decref(p) is False  # still shared
+    assert a.num_in_use == 1
+    assert a.decref(p) is True  # last holder frees
+    assert a.num_in_use == 0 and a.num_free == a.capacity
+    # Double-decref guard: the page has no live references anymore.
+    with pytest.raises(ValueError, match="decref of unallocated"):
+        a.decref(p)
+    with pytest.raises(ValueError, match="incref of unallocated"):
+        a.incref(p)
+
+
+def test_allocator_revive_and_shared_free_guards():
+    a = BlockAllocator(8)
+    (p,) = a.alloc(1)
+    with pytest.raises(ValueError, match="revive of in-use"):
+        a.revive(p)  # live page: sharers must incref, not revive
+    a.decref(p)
+    a.revive(p)  # cached-free content reclaimed
+    assert a.refcount(p) == 1
+    with pytest.raises(ValueError, match="not on the free list"):
+        a.revive(99)
+    a.incref(p)
+    with pytest.raises(ValueError, match="free of shared page"):
+        a.free([p])  # hard-free must never yank a page from sharers
+    freed = a.decref_all([p, p])
+    assert freed == [p] and a.num_in_use == 0
+
+
+# ------------------------------- prefix index --------------------------------
+
+
+def test_prefix_index_match_publish_partial_and_forget():
+    idx = PrefixIndex(4)
+    root_pages, root, partial = idx.match(np.arange(10))
+    assert root_pages == [] and partial is None
+    h1 = idx.publish(root, (0, 1, 2, 3), page=5)
+    h2 = idx.publish(h1, (4, 5, 6, 7), page=6)
+    assert len(idx) == 2
+    # Full-chain match; the prompt's last token never matches (its logits
+    # must come from prefill), so a 9-token prompt matches both pages but
+    # an 8-token prompt only the first.
+    pages, h, partial = idx.match(np.arange(9))
+    assert pages == [5, 6] and h == h2 and partial is None
+    pages, h, partial = idx.match(np.arange(8))
+    assert pages == [5] and h == h1
+    assert partial == (6, 3)  # tokens 4,5,6 of page 6 still usable
+    # Divergence mid-page surfaces the donor for copy-on-write.
+    div = np.asarray([0, 1, 2, 3, 4, 5, 9, 9, 9])
+    pages, h, partial = idx.match(div)
+    assert pages == [5] and partial == (6, 2)
+    # First publisher wins: republishing the same chain keeps page 5.
+    assert idx.publish(root, (0, 1, 2, 3), page=7) == h1
+    assert idx.match(np.arange(9))[0] == [5, 6]
+    # Reallocation invalidates whatever chain the page cached.
+    idx.forget_pages([5])
+    pages, h, partial = idx.match(np.arange(9))
+    assert pages == [] and h == root
+    assert len(idx) == 1  # page 6's entry survives (different chain head)
+
+
+def test_ngram_proposer_uses_previous_occurrence():
+    p = NgramProposer(max_n=3)
+    p.extend([1, 2, 3, 4, 1, 2, 3])
+    # The current suffix (1,2,3) must match its PREVIOUS occurrence, not
+    # itself, and propose the continuation seen there.
+    assert p.propose(2) == [4, 1]
+    q = NgramProposer(max_n=3)
+    q.extend([7, 8, 9])
+    assert q.propose(3) == []  # nothing repeats: no draft
+
+
+# ------------------------- prefix caching end-to-end -------------------------
+
+
+def test_prefix_hit_skips_prefill_and_matches_cold_tokens():
+    engine = _engine(_tiny_lm("paged", num_pages=25), max_len=32, slots=4)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(1, 47, size=(20,))
+    gw = ServingGateway(engine, prefill_chunk=8, seed=0)
+    rid = gw.submit(prompt, sampling=SamplingParams(max_new_tokens=8))
+    cold = gw.drain()[rid]
+    chunks_cold = gw.scheduler.stats["prefill_chunks"]
+    rid = gw.submit(prompt, sampling=SamplingParams(max_new_tokens=8))
+    warm = gw.drain()[rid]
+    assert warm.tokens == cold.tokens
+    s = gw.scheduler.stats
+    assert s["prefix_hits"] == 1 and s["prefix_misses"] == 1
+    # 2 of the prompt's 2.5 pages are published and reused; only the tail
+    # (4 tokens, one chunk) prefills the second time.
+    assert s["prefill_tokens_skipped"] == 16
+    assert s["prefill_chunks"] == chunks_cold + 1
+    assert gw.scheduler.allocator.num_in_use == 0
+
+
+def test_cow_divergence_forks_exactly_once_and_matches_unshared():
+    """A prompt diverging mid-page from a cached prefix forks the donor
+    page once (copy-on-write) and must produce exactly the tokens of an
+    uncached run — even while the donor's publisher is still decoding on
+    the shared pages."""
+    engine = _engine(_tiny_lm("paged", num_pages=25), max_len=32, slots=4)
+    rng = np.random.default_rng(1)
+    base = rng.integers(1, 47, size=(20,))
+    div = base.copy()
+    div[12:] = rng.integers(1, 47, size=(8,))  # diverges inside page 2
+
+    gw = ServingGateway(engine, prefill_chunk=8, seed=0)
+    rid_a = gw.submit(base, sampling=SamplingParams(max_new_tokens=8))
+    # A finishes and publishes pages 1-2 of its prompt.
+    res_a = gw.drain()
+    # B re-runs the base prompt (keeps the shared pages live) while C
+    # diverges; C's fork must not disturb B's view of the shared pages.
+    rid_b = gw.submit(base, sampling=SamplingParams(max_new_tokens=8))
+    rid_c = gw.submit(div, sampling=SamplingParams(max_new_tokens=8))
+    res = gw.drain()
+    assert gw.scheduler.stats["cow_forks"] == 1
+    assert res[rid_b].tokens == res_a[rid_a].tokens
+
+    ref = ServingGateway(engine, prefill_chunk=8, seed=0,
+                         prefix_caching=False, spec_k=0)
+    rid = ref.submit(div, sampling=SamplingParams(max_new_tokens=8))
+    ref_c = ref.drain()[rid]
+    rid = ref.submit(base, sampling=SamplingParams(max_new_tokens=8))
+    ref_a = ref.drain()[rid]
+    assert res[rid_c].tokens == ref_c.tokens
+    assert res_a[rid_a].tokens == ref_a.tokens
+    assert gw.scheduler.allocator.num_in_use == 0
+
+
+def test_evict_restore_sequence_holding_shared_prefix_pages():
+    """Preempting a sequence that shares prefix pages decrefs (never
+    frees) them: the co-sharer keeps decoding on intact pages, and the
+    restored victim finishes with exactly the uncontended tokens."""
+    engine = _engine(_tiny_lm("paged", num_pages=1 + 4, page=4),
+                     max_len=16, slots=2)
+    dense = _engine(_tiny_lm(), max_len=16, slots=2)
+    rng = np.random.default_rng(2)
+    shared = rng.integers(1, 47, size=(6,))
+    other = rng.integers(1, 47, size=(6,))
+
+    sched = Scheduler(engine, prefill_chunk=4, spec_k=0)
+    sched.submit(ServeRequest(request_id=0, prompt=shared, max_new_tokens=8))
+    while not any(s is not None and s.state == 2  # _RUNNING
+                  for s in sched._slot_seq):
+        sched.step()
+    # B shares A's published prompt page (refcount 2) ...
+    sched.submit(ServeRequest(request_id=1, prompt=shared, max_new_tokens=8,
+                              arrival_time=0.1))
+    sched.step()
+    assert sched.stats["prefix_hits"] == 1
+    # ... and the high-priority C forces an eviction under the tight pool.
+    sched.submit(ServeRequest(request_id=2, prompt=other, max_new_tokens=8,
+                              priority=1, arrival_time=0.2))
+    while sched.step():
+        pass
+    assert sched.stats["preemptions"] > 0, "pool contention never triggered"
+    for rid, prompt in ((0, shared), (1, shared), (2, other)):
+        expect, _ = dense.generate(prompt[None, :], max_new_tokens=8)
+        np.testing.assert_array_equal(
+            np.asarray(sched.result(rid).tokens), expect[0],
+            err_msg=f"request {rid} diverged after eviction under sharing")
+    assert sched.allocator.num_in_use == 0
+
+
+def test_deadline_expiry_of_one_sharer_leaves_other_pages_intact():
+    """A sharer cancelled by its deadline releases only its own
+    references: the surviving sharer's prefix pages stay mapped and its
+    output is unchanged, and the drain-time leak check stays clean."""
+    engine = _engine(_tiny_lm("paged", num_pages=25), max_len=32, slots=4)
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(1, 47, size=(17,))
+    gw = ServingGateway(engine, prefill_chunk=8, seed=0, spec_k=0)
+    rid = gw.submit(prompt, sampling=SamplingParams(max_new_tokens=12))
+    ref = gw.drain()[rid]
+    rid_a = gw.submit(prompt, sampling=SamplingParams(max_new_tokens=12))
+    rid_b = gw.submit(prompt, sampling=SamplingParams(max_new_tokens=12),
+                      deadline_s=0.15)
+    sched = gw.scheduler
+    # Step until B holds shared pages (admitted, prefix hit), then let its
+    # deadline lapse mid-flight while A keeps decoding.
+    while sched.stats["prefix_hits"] < 2:
+        gw.step()
+    time.sleep(0.2)
+    res = gw.drain()
+    assert res[rid_b].timed_out
+    assert res[rid_a].tokens == ref.tokens
+    assert sched.stats["timeouts"] == 1
+    assert sched.allocator.num_in_use == 0
+
+
+def test_gateway_drain_asserts_zero_page_references():
+    engine = _engine(_tiny_lm("paged", num_pages=9), max_len=32, slots=2)
+    gw = ServingGateway(engine, prefill_chunk=8)
+    rid = gw.submit(np.asarray([1, 2, 3]),
+                    sampling=SamplingParams(max_new_tokens=2))
+    assert not gw.drain()[rid].timed_out
+    # Simulate a refcount bug: a page acquired outside any sequence.
+    gw.scheduler.allocator.alloc(1)
+    with pytest.raises(RuntimeError, match="KV page leak after drain"):
+        gw.drain()
+
+
+# --------------------------- speculative decoding ----------------------------
+
+
+@pytest.mark.parametrize("layout,backend", [
+    ("dense", "ref"),
+    ("paged", "ref"),
+    ("paged", "pallas"),
+])
+def test_spec_decoding_matches_plain_greedy(layout, backend):
+    """Draft-verify must be token-for-token identical to plain greedy
+    decoding on every cache layout — including the interpreted Pallas
+    paged-decode kernel, whose multi-token verify window resolves through
+    the same registry path as chunked prefill."""
+    num_pages = 25 if layout == "paged" else None
+    engine = _engine(_tiny_lm(layout, num_pages=num_pages,
+                              decode_backend=backend),
+                     max_len=32, slots=2)
+    rng = np.random.default_rng(4)
+    prompts = [np.tile(np.asarray([5, 9, 3, 7]), 5),  # n-gram friendly
+               rng.integers(1, 47, size=(11,))]
+    spec = ServingGateway(engine, prefill_chunk=8, seed=0)
+    plain = ServingGateway(engine, prefill_chunk=8, seed=0, spec_k=0)
+    for prompt in prompts:
+        rid = spec.submit(prompt, sampling=SamplingParams(max_new_tokens=8))
+        a = spec.drain()[rid]
+        rid = plain.submit(prompt, sampling=SamplingParams(max_new_tokens=8))
+        b = plain.drain()[rid]
+        assert a.tokens == b.tokens, f"spec diverged on {layout}/{backend}"
+    assert spec.scheduler.stats["drafted_tokens"] > 0
+
+
+def test_spec_accepts_multiple_tokens_and_mixed_batch_stays_exact():
+    """A repetitive greedy prompt must accept > 1 token per verify step,
+    and greedy rows riding the batched verify next to sampled rows must
+    still reproduce plain greedy exactly (sampled rows ride at
+    n_draft = 0; position-0 logits are unaffected by draft padding)."""
+    engine = _engine(_tiny_lm("paged", num_pages=25), max_len=32, slots=4)
+    rep = np.tile(np.asarray([5, 9, 3, 7]), 5)
+    rng = np.random.default_rng(5)
+    noisy = rng.integers(1, 47, size=(9,))
+
+    gw = ServingGateway(engine, prefill_chunk=8, seed=0)
+    rid_g = gw.submit(rep, sampling=SamplingParams(max_new_tokens=10))
+    rid_s = gw.submit(noisy, sampling=SamplingParams(max_new_tokens=10,
+                                                     temperature=0.8))
+    res = gw.drain()
+    s = gw.scheduler.stats
+    assert s["verify_steps"] > 0
+    # accepted_per_step = (accepted + verify) / verify > 1 needs at least
+    # one accepted draft token; the repetitive prompt guarantees many.
+    assert s["accepted_tokens"] >= s["verify_steps"]
+    assert len(res[rid_s].tokens) == 10
+
+    plain = ServingGateway(engine, prefill_chunk=8, seed=0, spec_k=0)
+    rid = plain.submit(rep, sampling=SamplingParams(max_new_tokens=10))
+    ref = plain.drain()[rid]
+    assert res[rid_g].tokens == ref.tokens
+
+
+def test_recurrent_state_disables_speculation_and_prefix():
+    """Recurrent mixers consume tokens irreversibly — no KV positions to
+    rewind — so the scheduler must gate drafting (and prefix sharing) off
+    rather than corrupt state."""
+    from repro.layers import CausalLM, Decoder, Repeat
+    from repro.layers.rwkv import RWKV6Block
+
+    block = RWKV6Block.default_config().set(input_dim=32)
+    block.time_mix.set(head_dim=16, decay_lora_dim=8)
+    block.time_mix.kernel.set(wkv_chunk_size=4)
+    block.channel_mix.set(hidden_dim=64)
+    model = CausalLM.default_config().set(
+        name="lm",
+        decoder=Decoder.default_config().set(
+            vocab_size=48, dim=32,
+            stack=Repeat.default_config().set(layer=block, num_layers=2,
+                                              remat_policy=None)))
+    engine = _engine(model, slots=2)
+    sched = Scheduler(engine, prefill_chunk=4)
+    assert sched.spec_k == 0 and sched.prefix is None
+    rep = np.tile(np.asarray([5, 9, 3], np.int32), 4)
+    res = sched.run([ServeRequest(request_id=0, prompt=rep,
+                                  max_new_tokens=4)])
+    expect, _ = engine.generate(rep[None, :], max_new_tokens=4)
+    np.testing.assert_array_equal(np.asarray(res[0].tokens), expect[0])
+    assert sched.stats["verify_steps"] == 0
+
+
+def test_spec_verify_program_compiles_once():
+    """The batched verify is one program per scheduler (K fixed): a
+    second workload with new prompt lengths, drafts, and accept counts
+    must not add a compile anywhere in the serving path."""
+    engine = _engine(_tiny_lm("paged", num_pages=25), max_len=32, slots=4)
+    gw = ServingGateway(engine, prefill_chunk=8, seed=0)
+    rng = np.random.default_rng(6)
+
+    def workload(seed_tile):
+        gw.submit(np.tile(np.asarray(seed_tile), 6),
+                  sampling=SamplingParams(max_new_tokens=8))
+        gw.submit(rng.integers(1, 47, size=(int(rng.integers(4, 14)),)),
+                  sampling=SamplingParams(max_new_tokens=6, temperature=0.7))
+        gw.drain()
+
+    # A 15-token prompt decomposes into chunks 8+4+2+1, warming every
+    # prefill program any later (≤ 15-token) prompt can need.
+    gw.submit(rng.integers(1, 47, size=(15,)),
+              sampling=SamplingParams(max_new_tokens=2))
+    workload([5, 9, 3])
+    key = ("serve_spec_decode", gw.scheduler.spec_k)
+    assert key in engine._jit_fns, "spec workload never hit the verify path"
+    sizes = {k: fn._cache_size() for k, fn in engine._jit_fns.items()}
+    assert sizes[key] == 1
+    workload([8, 2, 4])
+    after = {k: fn._cache_size() for k, fn in engine._jit_fns.items()}
+    assert after == sizes, f"serving path recompiled: {sizes} -> {after}"
+
+
+# ------------------------------ kernel features ------------------------------
+
+
+def test_multi_query_feature_distinguishes_verify_windows():
+    """S' > 1 decode calls (chunked prefill, speculative verify) resolve
+    under a distinct feature key from 1-token decode steps."""
+    one = KernelFeatures(platform=kreg.current_platform(), dtype="float32",
+                         paged=True)
+    multi = KernelFeatures(platform=kreg.current_platform(), dtype="float32",
+                            paged=True, multi_query=True)
+    assert one != multi and hash(one) != hash(multi)
+    for feats in (one, multi):
+        spec = kreg.resolve_backend("attention.decode", feats, DEFAULT_CONFIG)
+        assert callable(spec.fn)

@@ -321,10 +321,17 @@ def test_evict_restore_roundtrip_exact():
 
 
 def test_scheduler_never_leaks_pages_under_churn():
-    """Allocator + pos-pool invariants after a contended mixed workload:
-    all pages returned, every page's positions invalidated."""
+    """Allocator invariants after a contended mixed workload: all pages
+    returned, and recycled pages never leak a previous tenant's tokens.
+
+    Freed pages now intentionally KEEP their contents (the prefix index
+    may revive them for cache hits; positions reset lazily at the next
+    allocation), so instead of asserting pos_pool == -1 we assert the
+    stronger end-to-end property the reset exists for: a second request
+    wave through the same (dirty) scheduler decodes exactly."""
     engine = _engine(_tiny_lm("paged", num_pages=1 + 6, page=4),
                      max_len=24, slots=3)
+    dense = _engine(_tiny_lm(), max_len=24, slots=3)
     sched = Scheduler(engine, prefill_chunk=4)
     rng = np.random.default_rng(2)
     reqs = [ServeRequest(request_id=i,
@@ -336,12 +343,16 @@ def test_scheduler_never_leaks_pages_under_churn():
     assert len(res) == 10 and all(r.tokens for r in res)
     assert sched.allocator.num_in_use == 0, "pages leaked"
     assert sched.allocator.num_free == sched.allocator.capacity
-    # Every pos_pool entry is invalidated — no stale positions for the next
-    # tenant's mask to trip over.
-    flat = jax.tree_util.tree_flatten_with_path(sched._cache)[0]
-    for path, leaf in flat:
-        if "pos_pool" in jax.tree_util.keystr(path):
-            assert (np.asarray(leaf) == -1).all(), "stale pos_pool entries"
+    wave2 = [ServeRequest(request_id=100 + i,
+                          prompt=rng.integers(0, 48, size=(7,)),
+                          max_new_tokens=6)
+             for i in range(3)]
+    res2 = sched.run(wave2)
+    for r, req in zip(res2, wave2):
+        expect, _ = dense.generate(req.prompt[None, :], max_new_tokens=6)
+        np.testing.assert_array_equal(np.asarray(r.tokens),
+                                      expect[0][:len(r.tokens)])
+    assert sched.allocator.num_in_use == 0, "pages leaked"
 
 
 # ----------------------------- 2x concurrency --------------------------------
@@ -514,7 +525,12 @@ def test_serving_path_compile_count_bounded():
                              priority=int(rng.integers(0, 2)))
                 for i in range(n)]
 
-    sched.run(workload(0, 8))
+    # Warm-up includes a repetitive greedy prompt so the speculative
+    # verify program compiles here — random workloads may not draft.
+    warm = workload(0, 8) + [
+        ServeRequest(request_id=50, prompt=np.tile([5, 9, 3], 6),
+                     max_new_tokens=6)]
+    sched.run(warm)
     compiles = {k: fn._cache_size() for k, fn in engine._jit_fns.items()}
     sched.run(workload(100, 8))
     after = {k: fn._cache_size() for k, fn in engine._jit_fns.items()}
