@@ -38,9 +38,16 @@ import numpy as np
 from repro.configs import registry
 from repro.core.config import visit_config
 from repro.inference.engine import InferenceEngine
+from repro.quantization.modifier import set_kv_cache_dtype
 from repro.serving import SamplingParams, ServingGateway
 
 BENCH_ARCHS = ["qwen2-1.5b", "gemma2-27b"]
+
+# kv_dtype ablation: same page-pool BYTE budget, different storage dtypes
+# (the quantized-KV density claim — more sequences per HBM byte).
+KV_ABLATION_ARCH = "qwen2-1.5b"
+KV_ABLATION_DTYPES = ["fp32", "bf16", "int8", "fp8_e4m3"]
+KV_ABLATION_SLOTS = 12  # page-limited, not slot-limited
 
 N_REQUESTS = 120  # 10x the original 12-request load
 # ~20 req/s: above what the no-cache gateway can absorb (its backlog
@@ -56,13 +63,17 @@ SHARED_FRACTION = 0.75  # requests starting with the shared system prompt
 LAST_JSON = None
 
 
-def _paged_engine(arch, max_len=64, slots=SLOTS):
+def _paged_engine(arch, max_len=64, slots=SLOTS, num_pages=None,
+                  kv_dtype=None):
     """Registry smoke model with the paged-KV serving config: half the
-    dense engine's full-residency pages, so the load exercises paging."""
+    dense engine's full-residency pages (unless ``num_pages`` pins the
+    pool), so the load exercises paging. ``kv_dtype`` retargets the paged
+    pools' storage format by short name."""
     spec = registry.get_spec(arch)
     cfg = spec.make_smoke()
     n_logical = -(-max_len // PAGE_SIZE)
-    num_pages = 1 + slots * n_logical // 2
+    if num_pages is None:
+        num_pages = 1 + slots * n_logical // 2
 
     def to_paged(_, c):
         if getattr(c, "kv_cache_layout", None) == "dense" \
@@ -71,11 +82,117 @@ def _paged_engine(arch, max_len=64, slots=SLOTS):
                   num_pages=num_pages)
 
     visit_config(cfg, to_paged)
+    if kv_dtype is not None:
+        set_kv_cache_dtype(cfg, kv_dtype, paged_only=True)
     engine = InferenceEngine.default_config().set(
         name="engine", model=cfg, max_len=max_len, slots=slots).instantiate()
     params = engine.model.initialize_parameters_recursively(jax.random.PRNGKey(0))
     engine.load(params)
     return engine, cfg.decoder.vocab_size
+
+
+def _page_pool_bytes_per_page(engine):
+    """Measured bytes of ONE physical page across every page-axis cache
+    leaf (KV payload + positions + scale rows if quantized) — from the
+    allocated arrays, so the density claim reflects real storage, not a
+    dtype label."""
+    gw = ServingGateway(engine, seed=0, prefix_caching=False, spec_k=0)
+    mgr, cache = gw.scheduler.manager, gw.scheduler._cache
+    leaves = jax.tree_util.tree_flatten(cache)[0]
+    total = 0
+    for leaf, info in zip(leaves, mgr._info):
+        if info.page_axis >= 0:
+            total += leaf.nbytes // leaf.shape[info.page_axis]
+    return total, mgr.num_pages
+
+
+def _decode_concurrency_probe(engine, vocab, seed):
+    """Saturating capacity probe: 24 requests that each grow to a full
+    max_len KV footprint (8-token prompt + 56 decoded tokens = 8 pages)
+    all arrive at once. Decode dominates, so the time-averaged decode
+    batch size — tokens produced per batched decode dispatch — settles at
+    how many full sequences the page pool sustains simultaneously.
+    (Peak-concurrency counters can't measure this: early in the run every
+    admitted sequence holds one page, so peaks reflect queue depth.)"""
+    from repro.serving import Scheduler, ServeRequest
+
+    rng = np.random.default_rng(seed)
+    sched = Scheduler(engine, prefill_chunk=8, spec_k=0,
+                      prefix_caching=False)
+    for i in range(24):
+        sched.submit(ServeRequest(
+            request_id=i, prompt=rng.integers(0, vocab, size=(8,)),
+            max_new_tokens=56, arrival_time=0.0))
+    while sched.step():
+        pass
+    total_tokens = sum(len(sched.result(i).tokens) for i in range(24)
+                       if sched.result(i) is not None)
+    return total_tokens / max(sched.stats["decode_steps"], 1)
+
+
+def _kv_dtype_ablation():
+    """Same arrival workload, same page-pool byte budget, four storage
+    dtypes. The budget is the bf16 pool's bytes; each dtype gets as many
+    pages as fit, and the scheduler's measured peak concurrency shows the
+    density win (acceptance: int8 fits >= 1.8x the sequences)."""
+    per_page = {}
+    for name in KV_ABLATION_DTYPES:
+        probe, _ = _paged_engine(KV_ABLATION_ARCH, slots=KV_ABLATION_SLOTS,
+                                 num_pages=2, kv_dtype=name)
+        per_page[name], _ = _page_pool_bytes_per_page(probe)
+    # Budget = the bf16 pool at the benchmark's standard half residency;
+    # every dtype gets as many pages as fit in those same bytes.
+    n_logical = -(-64 // PAGE_SIZE)
+    budget_pages_bf16 = KV_ABLATION_SLOTS * n_logical // 2
+    budget_bytes = budget_pages_bf16 * per_page["bf16"]
+
+    rows, payload = [], {}
+    for name in KV_ABLATION_DTYPES:
+        usable = int(budget_bytes // per_page[name])
+        engine, vocab = _paged_engine(KV_ABLATION_ARCH,
+                                      slots=KV_ABLATION_SLOTS,
+                                      num_pages=1 + usable, kv_dtype=name)
+        _drive(engine, vocab, seed=1, n_requests=16,
+               prefix_caching=False, spec_k=0)  # warm-up
+        gc.collect()
+        time.sleep(1.0)
+        gw, util, _ = _drive(engine, vocab, seed=3, n_requests=60,
+                             prefix_caching=False, spec_k=0)
+        decode_conc = _decode_concurrency_probe(engine, vocab, seed=4)
+        m = gw.metrics()
+        s = gw.scheduler.stats
+        payload[name] = {
+            "page_pool_bytes": usable * per_page[name],
+            "bytes_per_page": per_page[name],
+            "usable_pages": usable,
+            # How many full-max_len sequences the pool holds fully
+            # resident at once — the headline "concurrent sequences at
+            # fixed page-pool bytes", from measured per-page bytes.
+            "max_len_resident_seqs": usable // n_logical,
+            "avg_decode_batch": decode_conc,
+            "max_concurrent": s["max_concurrent"],
+            "preemptions": s["preemptions"],
+            "completed": m["completed"],
+            "timeouts": s["timeouts"],
+            "ttft_p50_us": m["ttft_p50_s"] * 1e6,
+            "tpot_p50_us": m["tpot_p50_s"] * 1e6,
+            "tokens_per_s": m["tokens_per_s"],
+            "peak_block_utilization": util,
+        }
+        del engine, gw
+        gc.collect()
+    for name in ("int8", "fp8_e4m3"):
+        payload[f"{name}_density_x_vs_bf16"] = (
+            payload[name]["usable_pages"] / payload["bf16"]["usable_pages"])
+        payload[f"{name}_concurrency_x_vs_bf16"] = (
+            payload[name]["max_len_resident_seqs"]
+            / max(payload["bf16"]["max_len_resident_seqs"], 1))
+    rows.append((f"serving_kv_density/{KV_ABLATION_ARCH}",
+                 payload["int8_density_x_vs_bf16"],
+                 f"int8_pages={payload['int8']['usable_pages']};"
+                 f"bf16_pages={payload['bf16']['usable_pages']};"
+                 f"concurrency_x={payload['int8_concurrency_x_vs_bf16']:.2f}"))
+    return rows, payload
 
 
 def _workload(vocab, seed, n_requests):
@@ -210,5 +327,10 @@ def run():
             "slots": SLOTS,
             "page_size": PAGE_SIZE,
         }
+    abl_rows, abl_payload = _kv_dtype_ablation()
+    rows.extend(abl_rows)
+    payload["kv_dtype_ablation"] = dict(
+        abl_payload, arch=KV_ABLATION_ARCH, slots=KV_ABLATION_SLOTS,
+        requests=60)
     LAST_JSON = payload
     return rows

@@ -32,11 +32,15 @@ BENCH_ARCHS = ["qwen2-1.5b", "mixtral-8x7b", "jamba-1.5-large-398b",
 # Archs additionally benchmarked under the bf16 dtype policy (fp32 parity
 # tolerance documented in README "Training path").
 BF16_ARCHS = ["qwen2-1.5b", "rwkv6-7b"]
+# Arch for the fp8-vs-bf16 delayed-scaling parity run (README
+# "Low-precision end-to-end"; acceptance: <1% relative loss diff).
+FP8_PARITY_ARCH = "qwen2-1.5b"
+FP8_PARITY_STEPS = 60
 
 LAST_JSON = None
 
 
-def _make_trainer(arch, *, policy=None, steps=8, batch=8, seq=32):
+def _make_trainer(arch, *, policy=None, fp8=False, steps=8, batch=8, seq=32):
     spec = registry.get_spec(arch)
     model_cfg = spec.make_smoke()
     cfg = SpmdTrainer.default_config().set(
@@ -52,6 +56,11 @@ def _make_trainer(arch, *, policy=None, steps=8, batch=8, seq=32):
         modifier = DtypePolicyModifier.default_config().set(
             policy=policy).instantiate()
         cfg = modifier.apply(cfg)
+    if fp8:
+        from repro.quantization.modifier import QuantizationModifier
+
+        cfg = QuantizationModifier.default_config().set(
+            fp8=True).instantiate().apply(cfg)
     return cfg.instantiate()
 
 
@@ -68,9 +77,9 @@ def _step_cost(trainer):
     return cost
 
 
-def _train_bench(arch, *, policy=None, steps=8, batch=8, seq=32):
-    trainer = _make_trainer(arch, policy=policy, steps=steps, batch=batch,
-                            seq=seq)
+def _train_bench(arch, *, policy=None, fp8=False, steps=8, batch=8, seq=32):
+    trainer = _make_trainer(arch, policy=policy, fp8=fp8, steps=steps,
+                            batch=batch, seq=seq)
     t0 = time.perf_counter()
     trainer.run(num_steps=1)  # compile + warm (the jitted step is cached)
     first_run = time.perf_counter() - t0
@@ -183,7 +192,32 @@ def run():
                                  "mfu_bound": mfu_bound}
         rows.append((f"train_roofline_bound/{rec['arch']}", bound_s * 1e6,
                      f"dominant={r['dominant']};mfu_bound={mfu_bound:.3f}"))
-    LAST_JSON = {"archs": archs_json, "roofline": roofline}
+    # fp8 delayed-scaling parity: bf16 policy vs bf16 + fp8 boundaries on
+    # one arch over a longer horizon (amax histories need steps to settle).
+    # Loss parity is the tracked signal — CPU emulates the fp8 casts, so
+    # only numerics (not wall-clock) are meaningful here.
+    from repro.layers.base import bf16_policy
+
+    base = _train_bench(FP8_PARITY_ARCH, policy=bf16_policy(),
+                        steps=FP8_PARITY_STEPS)
+    fp8 = _train_bench(FP8_PARITY_ARCH, policy=bf16_policy(), fp8=True,
+                       steps=FP8_PARITY_STEPS)
+    loss_rel = abs(fp8["final_loss"] - base["final_loss"]) / \
+        max(abs(base["final_loss"]), 1e-9)
+    fp8_json = {
+        "arch": FP8_PARITY_ARCH,
+        "steps": FP8_PARITY_STEPS,
+        "bf16_final_loss": base["final_loss"],
+        "fp8_final_loss": fp8["final_loss"],
+        "loss_rel_diff_vs_bf16": loss_rel,
+        "step_us_bf16": base["step_us"],
+        "step_us_fp8": fp8["step_us"],
+    }
+    rows.append((f"train_fp8_parity/{FP8_PARITY_ARCH}", fp8["step_us"],
+                 f"steps={FP8_PARITY_STEPS};"
+                 f"loss_rel_diff_vs_bf16={loss_rel:.4f}"))
+    LAST_JSON = {"archs": archs_json, "roofline": roofline,
+                 "fp8_train_parity": fp8_json}
     fleet = _fleet_bench()
     if fleet is not None:  # fleet fields only when the elastic path ran
         LAST_JSON["fleet"] = fleet

@@ -155,17 +155,19 @@ def _paged_kernel(
     v_ref,  # (1, page, 1, D)
     qpos_ref,  # (1, R) int32, -1 = padding row
     kpos_ref,  # (1, page) int32 per-token positions of the page, -1 = empty
-    o_ref,  # (1, 1, R, D)
-    m_scr,
-    l_scr,
-    acc_scr,
-    *,
+    *rest,  # [scale_ref (1, page, 2) f32 when has_scales,] o_ref, scratches
     num_logical_pages: int,
     causal: bool,
     sliding_window: Optional[int],
     logit_softcap: Optional[float],
     scale: float,
+    has_scales: bool,
 ):
+    if has_scales:
+        scale_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        scale_ref = None
+        o_ref, m_scr, l_scr, acc_scr = rest
     b = pl.program_id(0)
     j = pl.program_id(2)
 
@@ -176,6 +178,15 @@ def _paged_kernel(
     q = q_ref[0, 0].astype(jnp.float32) * scale
     k = k_ref[0, :, 0, :].astype(jnp.float32)
     v = v_ref[0, :, 0, :].astype(jnp.float32)
+    if scale_ref is not None:
+        # Quantized pool: per-token-slot (k, v) scales ride in as a page-shaped
+        # operand through the same scalar-prefetch table, so dequantization is
+        # in-VMEM and the HBM pool stays in its storage dtype. (Real-TPU note:
+        # int8 pools want page >= 32 for native tiling — min int8 tile is
+        # (32, 128); the interpreter used in CI accepts any page size.)
+        sc = scale_ref[0].astype(jnp.float32)  # (page, 2)
+        k = k * sc[:, 0:1]
+        v = v * sc[:, 1:2]
     mask = _decode_mask(qpos_ref[0][:, None], kpos_ref[0][None, :],
                         causal=causal, sliding_window=sliding_window)
     # Unmapped logical pages were clamped to physical page 0 for the DMA;
@@ -287,6 +298,7 @@ def paged_flash_decode_forward(
     page_tables: jax.Array,  # (B, N) int32 physical page ids, -1 = unmapped
     q_positions: jax.Array,  # (B, S') absolute positions of the new tokens
     *,
+    scale_pool: Optional[jax.Array] = None,  # (P, page, 2) f32 dequant scales
     causal: bool = True,
     sliding_window: Optional[int] = None,
     logit_softcap: Optional[float] = None,
@@ -317,6 +329,7 @@ def paged_flash_decode_forward(
 
     qr, qpos_rows, R, R_pad = _pack_q_rows(q, q_positions, Hkv)
 
+    has_scales = scale_pool is not None
     kernel = functools.partial(
         _paged_kernel,
         num_logical_pages=N,
@@ -324,25 +337,34 @@ def paged_flash_decode_forward(
         sliding_window=sliding_window,
         logit_softcap=logit_softcap,
         scale=scale,
+        has_scales=has_scales,
     )
 
     def phys(b, h, j, tbl):
         del h
         return jnp.maximum(tbl[b, j], 0)
 
+    in_specs = [
+        pl.BlockSpec((1, 1, R_pad, D), lambda b, h, j, tbl: (b, h, 0, 0)),
+        pl.BlockSpec((1, page, 1, D),
+                     lambda b, h, j, tbl: (phys(b, h, j, tbl), 0, h, 0)),
+        pl.BlockSpec((1, page, 1, D),
+                     lambda b, h, j, tbl: (phys(b, h, j, tbl), 0, h, 0)),
+        pl.BlockSpec((1, R_pad), lambda b, h, j, tbl: (b, 0)),
+        pl.BlockSpec((1, page),
+                     lambda b, h, j, tbl: (phys(b, h, j, tbl), 0)),
+    ]
+    operands = [page_tables, qr, k_pool, v_pool, qpos_rows, pos_pool]
+    if has_scales:
+        # Dequant scales follow the same table-indexed page fetch as K/V.
+        in_specs.append(pl.BlockSpec(
+            (1, page, 2), lambda b, h, j, tbl: (phys(b, h, j, tbl), 0, 0)))
+        operands.append(jnp.asarray(scale_pool, jnp.float32))
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(B, Hkv, N),
-        in_specs=[
-            pl.BlockSpec((1, 1, R_pad, D), lambda b, h, j, tbl: (b, h, 0, 0)),
-            pl.BlockSpec((1, page, 1, D),
-                         lambda b, h, j, tbl: (phys(b, h, j, tbl), 0, h, 0)),
-            pl.BlockSpec((1, page, 1, D),
-                         lambda b, h, j, tbl: (phys(b, h, j, tbl), 0, h, 0)),
-            pl.BlockSpec((1, R_pad), lambda b, h, j, tbl: (b, 0)),
-            pl.BlockSpec((1, page),
-                         lambda b, h, j, tbl: (phys(b, h, j, tbl), 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, R_pad, D), lambda b, h, j, tbl: (b, h, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((R_pad, _LANES), jnp.float32),
@@ -359,7 +381,7 @@ def paged_flash_decode_forward(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(page_tables, qr, k_pool, v_pool, qpos_rows, pos_pool)
+    )(*operands)
 
     out = out[:, :, :R].reshape(B, Hkv, Sq, G, D).transpose(0, 2, 1, 3, 4)
     return out.reshape(B, Sq, Hq, D)

@@ -95,11 +95,16 @@ def flash_attention(
 
 
 def paged_gather_kv(k_pool: jax.Array, v_pool: jax.Array,
-                    pos_pool: jax.Array, page_tables: jax.Array):
+                    pos_pool: jax.Array, page_tables: jax.Array,
+                    scale_pool: Optional[jax.Array] = None):
     """Materialize a paged pool into contiguous per-sequence (B, N*page, ...)
     K/V + positions via an XLA gather — the portable reference path for
     paged decode. Unmapped logical pages (table entry -1) gather physical
     page 0 but their positions are forced to -1, so masking drops them.
+
+    ``scale_pool`` (quantized pools: (P, page, 2) per-slot fp32 scales) is
+    gathered through the same table and applied, so callers always receive
+    dequantized fp32 K/V — the storage format stays opaque here.
     """
     tbl = jnp.asarray(page_tables, jnp.int32)  # (B, N)
     B, N = tbl.shape
@@ -107,6 +112,11 @@ def paged_gather_kv(k_pool: jax.Array, v_pool: jax.Array,
     safe = jnp.maximum(tbl, 0)
     k = k_pool[safe].reshape(B, N * page, Hkv, D)
     v = v_pool[safe].reshape(B, N * page, Hkv, D)
+    if scale_pool is not None:
+        from repro.quantization import kv as kv_quant
+
+        scales = scale_pool[safe].reshape(B, N * page, 2)
+        k, v = kv_quant.dequantize_kv(k, v, scales)
     kpos = jnp.where((tbl >= 0)[:, :, None], pos_pool[safe], -1)
     return k, v, kpos.reshape(B, N * page)
 
@@ -119,6 +129,7 @@ def decode_attention(
     q_positions,  # (B, S') or (S',) absolute positions of the new tokens
     k_positions,  # (B, T)/(T,) slot positions — or (P, page) pos pool (paged)
     page_tables: Optional[jax.Array] = None,  # (B, N) int32, -1 = unmapped
+    scale_pool: Optional[jax.Array] = None,  # (P, page, 2) fp32 (quantized)
     causal: bool = True,
     sliding_window: Optional[int] = None,
     logit_softcap: Optional[float] = None,
@@ -157,11 +168,15 @@ def decode_attention(
         # separately from 1-token decode steps: the query dim is a real
         # matmul dim there, so backends may tile it differently.
         multi_query=q.shape[1] > 1,
+        # KV *storage* dtype as a capability: quantized pools (int8/fp8 +
+        # scale_pool) resolve only to backends that dequantize in-kernel
+        # (pallas) or gather-dequantize (ref).
+        kv_dtype=str(k.dtype),
     )
     spec = registry.resolve_backend("attention.decode", feats, kernel)
     return spec.fn(
         q, k, v, q_positions=q_positions, k_positions=k_positions,
-        page_tables=page_tables, causal=causal,
+        page_tables=page_tables, scale_pool=scale_pool, causal=causal,
         sliding_window=sliding_window, logit_softcap=logit_softcap,
         scale=scale, logits_shard_fn=logits_shard_fn,
         cfg=kernel)

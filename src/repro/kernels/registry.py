@@ -149,16 +149,21 @@ class KernelFeatures:
     # different tiling (the query dim becomes a real matmul dim) and lets
     # the dispatch cache keep verify- and decode-shaped resolutions apart.
     multi_query: bool = False
+    # KV cache *storage* dtype (decode ops). Quantized pools ("int8",
+    # "float8_e4m3fn") carry per-slot scales in a scale_pool leaf and need
+    # a backend that dequantizes — in-kernel (pallas paged) or at gather
+    # (ref); plain float caches are a pass-through astype.
+    kv_dtype: str = "float32"
 
     def __post_init__(self):
         # Hash once at construction: dispatch-cache lookups are on the
-        # trace hot path and must not re-hash 11 fields per call (<1µs
+        # trace hot path and must not re-hash 12 fields per call (<1µs
         # amortized resolve budget, see bench_kernels).
         object.__setattr__(self, "_hash", hash((
             self.platform, self.dtype, self.interpret, self.explicit,
             self.needs_grad, self.ragged_positions, self.single_query,
             self.paged, self.sliding_window, self.replicated_cache,
-            self.multi_query)))
+            self.multi_query, self.kv_dtype)))
 
     def __hash__(self):  # noqa: D105 — dataclass respects explicit __hash__
         return self._hash
@@ -389,6 +394,12 @@ def _flash_decode_caps(features: KernelFeatures) -> Optional[str]:
                 "partial-softmax layout for sequence-sharded caches")
     if features.needs_grad:
         return "flash-decode is forward-only (no custom VJP)"
+    if features.kv_dtype == "int8" and not features.paged:
+        # Correctness: int8 KV is only meaningful with the per-slot scale
+        # rows that live in the paged pool; a dense int8 cache has no
+        # scales to dequantize with. Unconditional.
+        return ("int8 KV storage requires the paged layout (scale_pool "
+                "carries the per-slot scales)")
     return None
 
 
@@ -474,19 +485,23 @@ def _register_builtin_specs() -> None:
         platforms=("*",), priority=0))
 
     # ---- attention.decode ----------------------------------------------
-    # fn(q, k, v, *, q_positions, k_positions, page_tables, causal,
-    #    sliding_window, logit_softcap, scale, logits_shard_fn, cfg)
+    # fn(q, k, v, *, q_positions, k_positions, page_tables, scale_pool,
+    #    causal, sliding_window, logit_softcap, scale, logits_shard_fn, cfg)
 
     def _decode_pallas(interpret):
-        def fn(q, k, v, *, q_positions, k_positions, page_tables, causal,
-               sliding_window, logit_softcap, scale, logits_shard_fn, cfg):
+        def fn(q, k, v, *, q_positions, k_positions, page_tables, scale_pool,
+               causal, sliding_window, logit_softcap, scale, logits_shard_fn,
+               cfg):
             del logits_shard_fn  # replicated cache (predicate-enforced)
             if page_tables is not None:
                 return paged_flash_decode_forward(
                     q, k, v, k_positions, page_tables, q_positions,
+                    scale_pool=scale_pool,
                     causal=causal, sliding_window=sliding_window,
                     logit_softcap=logit_softcap, scale=scale,
                     interpret=interpret)
+            # Contiguous (dense-cache) decode never carries scales (the
+            # kv_dtype capability gate rejects quantized dense caches).
             return flash_decode_forward(
                 q, k, v, q_positions, k_positions, causal=causal,
                 sliding_window=sliding_window, logit_softcap=logit_softcap,
@@ -495,16 +510,17 @@ def _register_builtin_specs() -> None:
         return fn
 
     def _decode_ref(q, k, v, *, q_positions, k_positions, page_tables,
-                    causal, sliding_window, logit_softcap, scale,
+                    scale_pool, causal, sliding_window, logit_softcap, scale,
                     logits_shard_fn, cfg):
         del cfg
         if page_tables is not None:
             # Portable paged path: materialize this batch's pages with an
-            # XLA gather, then run the reference oracle.
+            # XLA gather (dequantizing through scale_pool when the pool is
+            # quantized), then run the reference oracle.
             from repro.kernels import ops as kernel_ops
 
             k, v, k_positions = kernel_ops.paged_gather_kv(
-                k, v, k_positions, page_tables)
+                k, v, k_positions, page_tables, scale_pool=scale_pool)
             k = k.astype(q.dtype)
             v = v.astype(q.dtype)
             logits_shard_fn = None

@@ -88,13 +88,11 @@ def seq_parallel_activations(model_cfg):
 
 def kv_cache_f8(model_cfg):
     """KV cache in fp8 (e4m3): halves decode cache bytes vs bf16 — the
-    quantized-cache serving lever (beyond-paper for this shape)."""
+    quantized-cache serving lever (beyond-paper for this shape). The dtype
+    name resolves inside repro.quantization (dtype literals live there)."""
+    from repro.quantization.modifier import set_kv_cache_dtype
 
-    def visit(path, cfg):
-        if "kv_cache_dtype" in cfg.keys():
-            cfg.set(kv_cache_dtype=jnp.float8_e4m3fn)
-
-    visit_config(model_cfg, visit)
+    set_kv_cache_dtype(model_cfg, "fp8_e4m3")
 
 
 def attn_chunk_2k(model_cfg):

@@ -20,6 +20,7 @@ from repro.configs import registry
 from repro.core.config import config_for_function
 from repro.trainer import optimizers as opt_lib
 from repro.layers.base import bf16_policy
+from repro.quantization.modifier import QuantizationModifier
 from repro.trainer.mesh_rules import (
     DtypePolicyModifier,
     GradAccumModifier,
@@ -43,6 +44,33 @@ from repro.runtime.signals import Preempted, install_preemption_handler
 # capability predicates. Rules are anchored fullmatch: list specific
 # instance types before broad families.
 MESH_RULES = [
+    # Low-precision variants ride the same recipe plus ONE extra modifier:
+    # "-fp8" suffix = fp8 train compute (delayed-scaling fake-quant at
+    # module boundaries, fp32 masters kept by ZeRO-1 as usual); "-w8a8"
+    # suffix = int8 weight/activation GEMMs. Listed before the broad
+    # family rule (fullmatch, first match wins).
+    ("tpu-v5e-.*-fp8", [
+        MeshShapeModifier.default_config().set(
+            mesh_shape=(16, 16), mesh_axis_names=("data", "model")),
+        RematPolicyModifier.default_config().set(policy="full"),
+        KernelModifier.default_config().set(
+            op_overrides={"attention.fwd": "pallas"},
+            update={"block_q": 256, "block_k": 512}),
+        DtypePolicyModifier.default_config().set(policy=bf16_policy()),
+        Zero1Modifier.default_config(),
+        QuantizationModifier.default_config().set(fp8=True),
+    ]),
+    ("tpu-v5e-.*-w8a8", [
+        MeshShapeModifier.default_config().set(
+            mesh_shape=(16, 16), mesh_axis_names=("data", "model")),
+        RematPolicyModifier.default_config().set(policy="full"),
+        KernelModifier.default_config().set(
+            op_overrides={"attention.fwd": "pallas"},
+            update={"block_q": 256, "block_k": 512}),
+        DtypePolicyModifier.default_config().set(policy=bf16_policy()),
+        Zero1Modifier.default_config(),
+        QuantizationModifier.default_config().set(w8a8=True),
+    ]),
     ("tpu-v5e-.*", [
         MeshShapeModifier.default_config().set(
             mesh_shape=(16, 16), mesh_axis_names=("data", "model")),

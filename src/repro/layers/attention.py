@@ -30,6 +30,7 @@ from repro.kernels import ops as kernel_ops
 from repro.layers.base import BaseLayer, KernelConfig, fan_in_init
 from repro.layers.basic import Linear
 from repro.layers.rope import BaseRotaryEmbedding, RotaryEmbedding
+from repro.quantization import kv as kv_quant
 
 __all__ = ["MultiheadAttention"]
 
@@ -107,6 +108,13 @@ class MultiheadAttention(BaseLayer):
             # paging them would only add indirection.
             raise ValueError("kv_cache_layout='paged' does not support "
                              "sliding_window; keep the dense ring layout")
+        # Quantized-pool format (int8 / fp8-e4m3 with per-slot scales in a
+        # scale_pool leaf), or None for plain astype storage. Resolved once,
+        # declaratively — the layer never branches on dtype names (that
+        # logic is encapsulated in repro.quantization.kv), and an invalid
+        # combination (int8 on a dense ring) fails here, at build time.
+        self._kv_fmt = kv_quant.pool_format(cfg.kv_cache_dtype,
+                                            layout=cfg.kv_cache_layout)
         proj = cfg.proj.clone().set(
             input_dim=cfg.input_dim,
             bias=cfg.qkv_bias,
@@ -182,7 +190,7 @@ class MultiheadAttention(BaseLayer):
         return not any(size(e) > 1 for e in tuple(spec))
 
     def _attend(self, q, k, v, *, q_positions, k_positions, decode=False,
-                page_tables=None):
+                page_tables=None, scale_pool=None):
         cfg = self.config
         kwargs = dict(
             q_positions=q_positions,
@@ -200,7 +208,7 @@ class MultiheadAttention(BaseLayer):
                 spec = (kv_spec[0], None, None, None, kv_spec[1])
                 logits_shard_fn = lambda l: self._shard(l, spec)  # noqa: E731
             return kernel_ops.decode_attention(
-                q, k, v, page_tables=page_tables,
+                q, k, v, page_tables=page_tables, scale_pool=scale_pool,
                 replicated_cache=self._kv_cache_replicated(),
                 logits_shard_fn=logits_shard_fn,
                 kernel=self.kernel_config, **kwargs)
@@ -248,8 +256,11 @@ class MultiheadAttention(BaseLayer):
         kv = tuple(cfg.kv_cache_partition) if cfg.kv_cache_partition else (None,) * 4
         if cfg.kv_cache_layout == "paged":
             pool = (None, None, kv[2], kv[3])  # (P, page, Hkv, D)
-            return {"k_pool": pool, "v_pool": pool, "pos_pool": (None, None),
-                    "page_table": (kv[0], None), "index": (kv[0],)}
+            specs = {"k_pool": pool, "v_pool": pool, "pos_pool": (None, None),
+                     "page_table": (kv[0], None), "index": (kv[0],)}
+            if self._kv_fmt is not None:
+                specs["scale_pool"] = (None, None, None)  # (P, page, 2)
+            return specs
         return {"k": kv, "v": kv, "pos": (kv[0], kv[1]), "index": (kv[0],)}
 
     def init_states(self, batch_size: int, max_len: int) -> Dict[str, Any]:
@@ -278,15 +289,20 @@ class MultiheadAttention(BaseLayer):
                                        ).reshape(batch_size, n_logical)
             else:
                 table = jnp.full((batch_size, n_logical), -1, jnp.int32)
-            return {
-                "k_pool": self._shard(jnp.zeros(pool_shape, cfg.kv_cache_dtype),
+            storage = (self._kv_fmt.storage_dtype if self._kv_fmt is not None
+                       else cfg.kv_cache_dtype)
+            state = {
+                "k_pool": self._shard(jnp.zeros(pool_shape, storage),
                                       pool_spec),
-                "v_pool": self._shard(jnp.zeros(pool_shape, cfg.kv_cache_dtype),
+                "v_pool": self._shard(jnp.zeros(pool_shape, storage),
                                       pool_spec),
                 "pos_pool": jnp.full((P, page), -1, jnp.int32),
                 "page_table": table,
                 "index": jnp.zeros((batch_size,), jnp.int32),
             }
+            if self._kv_fmt is not None:
+                state["scale_pool"] = kv_quant.init_scale_pool(P, page)
+            return state
         T = self._cache_len(max_len)
         shape = (batch_size, T, cfg.num_kv_heads, cfg.head_dim)
         cache = {
@@ -322,13 +338,29 @@ class MultiheadAttention(BaseLayer):
         oob = P * page
         flat = jnp.where(valid & (phys > 0), flat, oob)  # page 0 = null
         H, D = cfg.num_kv_heads, cfg.head_dim
+        if self._kv_fmt is not None:
+            # Quantize-on-write: per-token-slot scales scatter through the
+            # same (OOB-dropping) flat index as the payload, so a dropped
+            # write drops its scale too. Deterministic quantization is what
+            # keeps prefix hits exact: a shared page holds bitwise the same
+            # bytes a cold prefill would produce.
+            k_st, v_st, scales = kv_quant.quantize_kv_write(k, v,
+                                                            self._kv_fmt)
+        else:
+            k_st = k.astype(cfg.kv_cache_dtype)
+            v_st = v.astype(cfg.kv_cache_dtype)
+            scales = None
         new_k = state["k_pool"].reshape(oob, H, D).at[flat].set(
-            k.astype(cfg.kv_cache_dtype)).reshape(P, page, H, D)
+            k_st).reshape(P, page, H, D)
         new_v = state["v_pool"].reshape(oob, H, D).at[flat].set(
-            v.astype(cfg.kv_cache_dtype)).reshape(P, page, H, D)
+            v_st).reshape(P, page, H, D)
         new_pos = state["pos_pool"].reshape(oob).at[flat].set(
             positions.astype(jnp.int32)).reshape(P, page)
-        return {"k_pool": new_k, "v_pool": new_v, "pos_pool": new_pos}
+        pools = {"k_pool": new_k, "v_pool": new_v, "pos_pool": new_pos}
+        if scales is not None:
+            pools["scale_pool"] = state["scale_pool"].reshape(oob, 2).at[
+                flat].set(scales).reshape(P, page, 2)
+        return pools
 
     def prefill(self, state: Dict[str, Any], x: jax.Array,
                 positions: Optional[jax.Array] = None,
@@ -403,7 +435,8 @@ class MultiheadAttention(BaseLayer):
             out = self._attend(
                 q, pools["k_pool"], pools["v_pool"],
                 q_positions=positions, k_positions=pools["pos_pool"],
-                page_tables=state["page_table"], decode=True)
+                page_tables=state["page_table"],
+                scale_pool=pools.get("scale_pool"), decode=True)
             out = out.reshape(B, S_new, cfg.num_heads * cfg.head_dim)
             return {**pools, "page_table": state["page_table"],
                     "index": index + S_new}, self.o_proj(out)

@@ -68,12 +68,18 @@ class DtypePolicy(ConfigBase):
     ``grad_dtype``: dtype gradients are accumulated in (grad-accumulation
         buffers; the trainer reads it via ``DtypePolicyModifier``). None =
         accumulate in the param dtype.
+    ``fp8``: fp8 compute mode — a :class:`repro.quantization.fp8.Fp8Config`.
+        GEMM-boundary layers (``_fp8_boundary = True``, e.g. Linear)
+        fake-quantize their inputs to the e4m3 grid with per-tensor
+        *delayed* scaling; the amax history rides in layer state. None =
+        off. Set tree-wide by ``quantization.modifier.QuantizationModifier``.
     """
 
     param_dtype: Optional[Any] = None
     compute_dtype: Optional[Any] = None
     output_dtype: Optional[Any] = None
     grad_dtype: Optional[Any] = None
+    fp8: Optional[Any] = None
 
 
 def bf16_policy() -> DtypePolicy:
@@ -159,6 +165,11 @@ class BaseLayer(Module):
         # Set on every layer in one pass by DtypePolicyModifier.
         dtype_policy: Optional[DtypePolicy] = None
 
+    # GEMM layers opt into the fp8 module-boundary fake-quant (Linear sets
+    # True); structural/norm/softmax layers keep full-precision boundaries,
+    # which is what makes DtypePolicy.fp8 safe to set tree-wide.
+    _fp8_boundary = False
+
     # --- parameter declaration (override in subclasses) ---------------------
 
     def _create_layer_parameter_specs(self) -> Dict[str, ParameterSpec]:
@@ -198,21 +209,62 @@ class BaseLayer(Module):
         policy = self.config.dtype_policy
         return policy.compute_dtype if policy is not None else None
 
+    def _fp8_config(self):
+        """The active fp8 compute config, or None (off / layer opted out)."""
+        policy = self.config.dtype_policy
+        fp8 = getattr(policy, "fp8", None) if policy is not None else None
+        return fp8 if (fp8 is not None and self._fp8_boundary) else None
+
+    def _fp8_fake_quant(self, xs, fp8_cfg):
+        """Delayed-scaling fake-quant of boundary inputs (+ amax rollup).
+
+        Reads the layer's ``fp8_amax_history`` state (skips silently when
+        absent — e.g. a checkpoint predating the policy) and, in training,
+        emits the rolled history as a state update the train step folds
+        back into the params.
+        """
+        from repro.quantization import fp8 as fp8_lib
+
+        state = self.state
+        history = state.get(fp8_lib.AMAX_HISTORY_KEY) \
+            if isinstance(state, dict) else None
+        if history is None:
+            return xs
+        out, amaxes = [], []
+        for x in xs:
+            if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+                xq, amax = fp8_lib.boundary_fake_quant(
+                    x, history, margin=fp8_cfg.margin)
+                out.append(xq)
+                amaxes.append(amax)
+            else:
+                out.append(x)
+        if amaxes and self.is_training:
+            amax = amaxes[0] if len(amaxes) == 1 else jnp.max(jnp.stack(amaxes))
+            self.add_state_update(
+                fp8_lib.AMAX_HISTORY_KEY,
+                fp8_lib.roll_amax_history(history, amax))
+        return tuple(out)
+
     def _to_compute(self, *xs):
         """Casts floating arrays to the policy compute dtype (module-boundary
-        input cast; a no-op without a policy). Non-float leaves pass through."""
+        input cast; a no-op without a policy). Non-float leaves pass through.
+        With ``DtypePolicy.fp8`` set, GEMM-boundary layers additionally
+        fake-quantize the cast inputs to the e4m3 grid here."""
         dt = self.compute_dtype
-        if dt is None:
-            return xs[0] if len(xs) == 1 else xs
+        if dt is not None:
+            def cast(x):
+                if (hasattr(x, "dtype")
+                        and jnp.issubdtype(x.dtype, jnp.floating)
+                        and x.dtype != jnp.dtype(dt)):
+                    return x.astype(dt)
+                return x
 
-        def cast(x):
-            if (hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating)
-                    and x.dtype != jnp.dtype(dt)):
-                return x.astype(dt)
-            return x
-
-        out = tuple(cast(x) for x in xs)
-        return out[0] if len(out) == 1 else out
+            xs = tuple(cast(x) for x in xs)
+        fp8_cfg = self._fp8_config()
+        if fp8_cfg is not None:
+            xs = self._fp8_fake_quant(xs, fp8_cfg)
+        return xs[0] if len(xs) == 1 else tuple(xs)
 
     def _to_output(self, x: jax.Array) -> jax.Array:
         """Casts a head/model output to the policy output dtype (if set)."""
@@ -232,6 +284,7 @@ class BaseLayer(Module):
             if self.config.param_partition_spec is not None:
                 spec = dataclasses.replace(spec, mesh_axes=self.config.param_partition_spec)
             specs[name] = self._resolve_param_spec_dtype(spec)
+        specs.update(self._fp8_parameter_specs())
         for child_name, child in self._children.items():
             if isinstance(child, BaseLayer):
                 child_specs = child.create_parameter_specs_recursively()
@@ -239,11 +292,28 @@ class BaseLayer(Module):
                     specs[child_name] = child_specs
         return specs
 
+    def _fp8_parameter_specs(self) -> Dict[str, ParameterSpec]:
+        """The delayed-scaling amax history, when fp8 is active: a tiny
+        replicated fp32 param (weight-decay exempt, dtype pinned — it
+        bypasses the policy's param_dtype override on purpose)."""
+        fp8 = self._fp8_config()
+        if fp8 is None:
+            return {}
+        from repro.quantization.fp8 import AMAX_HISTORY_KEY
+
+        return {AMAX_HISTORY_KEY: ParameterSpec(
+            shape=(int(fp8.amax_history_len),), dtype=jnp.float32,
+            initializer=zeros_init(), mesh_axes=None,
+            weight_decay_scale=0.0)}
+
     def initialize_parameters_recursively(self, prng_key: jax.Array) -> Dict[str, Any]:
         params: Dict[str, Any] = {}
         own = self._create_layer_parameter_specs()
         for name, spec in own.items():
             spec = self._resolve_param_spec_dtype(spec)
+            sub_key = jax.random.fold_in(prng_key, _stable_hash(name))
+            params[name] = spec.initialize(sub_key)
+        for name, spec in self._fp8_parameter_specs().items():
             sub_key = jax.random.fold_in(prng_key, _stable_hash(name))
             params[name] = spec.initialize(sub_key)
         for child_name, child in self._children.items():

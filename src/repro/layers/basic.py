@@ -57,6 +57,10 @@ def get_activation(name: str) -> Callable:
 class Linear(BaseLayer):
     """y = x @ W (+ b). Weight shape (input_dim, output_dim)."""
 
+    # GEMM boundary: with DtypePolicy.fp8 set, inputs are fake-quantized
+    # to the e4m3 grid in _to_compute (delayed per-tensor scaling).
+    _fp8_boundary = True
+
     @config_class
     class Config(BaseLayer.Config):
         input_dim: Required[int] = REQUIRED

@@ -1,100 +1,13 @@
-"""Quantization as a drop-in DotGeneral/Linear replacement (paper §4.2).
+"""Compatibility shim: quantized layers moved to ``repro.quantization``.
 
-"All components are implemented as strictly encapsulated modules. This
-allows expressing optimizations like quantization as a replacement of
-DotGeneral layers with their quantization-aware equivalents." — we implement
-exactly that: ``QuantizedLinear`` is interface-compatible with ``Linear``
-(same params, same config surface + quantization knobs), integrated into any
-experiment by the usual ~5-line ``replace_config`` traversal, selected per
-hardware target by ``Int8ConfigModifier`` (App. A's INT8ConfigModifier).
-
-Scheme: dynamic symmetric int8 ("w8a8"): per-output-channel weight scales,
-per-token activation scales, int8 x int8 -> int32 accumulation (MXU-native
-on TPU), rescale in fp32. Fake-quant semantics are exact on any backend.
+The w8a8 ``QuantizedLinear`` / ``Int8ConfigModifier`` now live in
+:mod:`repro.quantization.linear` (with the raw numerics in
+:mod:`repro.quantization.numerics`), alongside the quantized paged-KV
+formats and the fp8 train-compute path. This module re-exports the
+original names so existing imports keep working.
 """
 
-from __future__ import annotations
-
-from typing import Optional
-
-import jax
-import jax.numpy as jnp
-
-from repro.core.config import config_class, visit_config
-from repro.core.module import no_context
-from repro.core.utils import PartitionSpecLike
-from repro.layers.basic import Linear
-from repro.trainer.mesh_rules import ConfigModifier
+from repro.quantization.linear import (Int8ConfigModifier, QuantizedLinear,
+                                       quantize_int8)
 
 __all__ = ["QuantizedLinear", "Int8ConfigModifier", "quantize_int8"]
-
-
-def quantize_int8(x: jax.Array, axis: int) -> tuple:
-    """Symmetric int8 quantization along ``axis``: returns (q, scale)."""
-    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis, keepdims=True)
-    scale = jnp.maximum(amax, 1e-8) / 127.0
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
-                 ).astype(jnp.int8)
-    return q, scale
-
-
-class QuantizedLinear(Linear):
-    """Linear with dynamic int8 weight+activation quantization (w8a8).
-
-    Same parameters as Linear (the checkpoint is interchangeable); the
-    quantization is purely a compute-path choice.
-    """
-
-    @config_class
-    class Config(Linear.Config):
-        # Straight-through estimator for training; pure int8 path at inference.
-        straight_through: bool = True
-
-    def forward(self, x: jax.Array) -> jax.Array:
-        cfg = self.config
-        x = self._to_compute(x)
-        w = self.state["weight"]
-        xq, x_scale = quantize_int8(x, axis=-1)  # per-token
-        wq, w_scale = quantize_int8(w, axis=0)  # per-out-channel
-
-        # int8 x int8 -> int32 accumulate (MXU-native), rescale fp32.
-        acc = jax.lax.dot_general(
-            xq, wq, (((x.ndim - 1,), (0,)), ((), ())),
-            preferred_element_type=jnp.int32)
-        y = acc.astype(jnp.float32) * x_scale * w_scale.reshape(
-            (1,) * (x.ndim - 1) + (-1,))
-
-        if cfg.straight_through and self.is_training:
-            # STE: forward uses quantized value, gradient flows as if fp.
-            y_fp = (x.astype(jnp.float32) @ w.astype(jnp.float32))
-            y = y_fp + jax.lax.stop_gradient(y - y_fp)
-
-        y = y.astype(x.dtype)
-        if cfg.bias:
-            y = y + self.state["bias"].astype(y.dtype)
-        if cfg.output_partition is not None:
-            y = self._shard(y, cfg.output_partition)
-        return y
-
-
-class Int8ConfigModifier(ConfigModifier):
-    """Paper App. A's INT8ConfigModifier: swaps every Linear for its
-    quantization-aware equivalent across the entire trainer config."""
-
-    @config_class
-    class Config(ConfigModifier.Config):
-        straight_through: bool = True
-
-    @no_context
-    def apply(self, trainer_cfg):
-        from repro.core.config import replace_config
-
-        replace_config(
-            trainer_cfg,
-            target=lambda c: type(c) is Linear.Config,
-            new_cfg=lambda old: QuantizedLinear.default_config().set(
-                straight_through=self.config.straight_through,
-                **{k: getattr(old, k) for k in old.keys() if k != "name"}),
-            propagate=(),
-        )
-        return trainer_cfg

@@ -301,6 +301,7 @@ class Repeat(BaseLayer):
             side = {
                 "summaries": collection.summaries,
                 "module_outputs": collection.module_outputs,
+                "state_updates": collection.state_updates,
             }
             if fn_name == "forward":
                 return out, side
@@ -365,6 +366,12 @@ class Repeat(BaseLayer):
             self._ctx.add_summary(f"stack/{key}", value)
         for key, value in side["module_outputs"].items():
             self._ctx.add_module_output(f"stack/{key}", value)
+        # State updates (e.g. fp8 amax histories) re-emit under "layer/":
+        # the scan stacks each update (L, ...), which is exactly the layout
+        # of the stacked params under this Repeat's "layer" subtree, so the
+        # trainer's fold-back addresses them without knowing about scan.
+        for key, value in side.get("state_updates", {}).items():
+            self._ctx.add_state_update(f"layer/{key}", value)
 
 
 class StackedTransformer(BaseLayer):

@@ -1,0 +1,45 @@
+"""Low-precision subsystem: quantized paged KV storage and fp8 compute.
+
+This package is the single home for low-precision *dtype logic* in the
+codebase — everything outside it (layers, kernels, serving, trainer)
+handles opaque ``(values, scales)`` pairs, storage dtypes, or resolved
+format objects produced here.  A grep contract
+(``tests/test_quantization.py``) enforces that no ``int8``/``float8``
+dtype branching leaks outside ``src/repro/quantization/`` and the kernel
+registry, mirroring the no-impl-branching contract of the PR 4 kernel
+registry.
+
+Submodules:
+
+* :mod:`repro.quantization.numerics` — scaled integer/fp8 casts and amax
+  helpers shared by every consumer.
+* :mod:`repro.quantization.kv` — paged-KV storage formats: int8 /
+  simulated fp8-e4m3 pools with per-token-slot scales carried in a
+  ``scale_pool`` leaf alongside ``k_pool``/``v_pool``.
+* :mod:`repro.quantization.fp8` — fp8 train compute: per-tensor delayed
+  scaling (amax history in layer state) applied at module boundaries by
+  :class:`repro.layers.base.BaseLayer`.
+* :mod:`repro.quantization.linear` — w8a8 :class:`QuantizedLinear` and
+  the :class:`Int8ConfigModifier` that swaps it into any arch config.
+* :mod:`repro.quantization.modifier` — :class:`QuantizationModifier`,
+  the one mesh-rule knob that rewrites a registered arch config for fp8
+  compute, w8a8 linears, and/or a quantized KV cache.
+
+``linear`` and ``modifier`` import from ``repro.layers`` /
+``repro.trainer`` and are therefore *not* imported here — import them
+directly to avoid cycles (``repro.layers.attention`` imports
+``repro.quantization.kv`` at module load).
+"""
+
+from repro.quantization import kv, numerics
+from repro.quantization.kv import KVQuantFormat, pool_format
+from repro.quantization.numerics import dequantize, quantize_int8
+
+__all__ = [
+    "KVQuantFormat",
+    "dequantize",
+    "kv",
+    "numerics",
+    "pool_format",
+    "quantize_int8",
+]

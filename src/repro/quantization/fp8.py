@@ -1,0 +1,84 @@
+"""fp8 train compute: per-tensor delayed scaling at module boundaries.
+
+The fp8 recipe used by production trainers (Transformer Engine style):
+activations entering a GEMM layer are cast through float8_e4m3fn with a
+*delayed* per-tensor scale — ``scale = max(amax history) / E4M3_MAX`` —
+so the scale is known before the activation is, and the current step's
+amax is pushed into the history for the next step.  We implement the
+simulated ("fake-quant") form: values are quantized to the exact e4m3
+grid but carried in the compute dtype, with a straight-through gradient,
+so the numerics (and the loss curve) match an fp8 MXU path while staying
+runnable on any backend.
+
+Wiring: :class:`repro.layers.base.BaseLayer` applies
+:func:`boundary_fake_quant` inside its ``_to_compute`` module-boundary
+cast whenever its ``DtypePolicy.fp8`` is set and the layer opts in via
+``_fp8_boundary`` (GEMM layers: Linear); the amax history is an ordinary
+``(history_len,)`` fp32 parameter named :data:`AMAX_HISTORY_KEY`
+(weight-decay exempt, replicated) whose roll is emitted as a state
+update and folded back into the params by the train step — which is what
+lets the whole mechanism compose with ZeRO-1, master weights, and grad
+accumulation (microbatch histories combine by elementwise max).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ConfigBase, config_class
+from repro.quantization import numerics
+
+__all__ = [
+    "Fp8Config",
+    "AMAX_HISTORY_KEY",
+    "boundary_fake_quant",
+    "roll_amax_history",
+]
+
+# Layer-state / parameter name of the delayed-scaling amax history.
+AMAX_HISTORY_KEY = "fp8_amax_history"
+
+
+@config_class
+class Fp8Config(ConfigBase):
+    """Delayed-scaling fp8 compute mode (carried as ``DtypePolicy.fp8``).
+
+    ``amax_history_len``: steps of amax history the scale is derived
+        from (max over the window rides out per-batch amax noise).
+    ``margin``: scale headroom factor; >1 trades a little resolution for
+        fewer saturated outliers when activations spike between steps.
+    """
+
+    amax_history_len: int = 16
+    margin: float = 1.0
+
+
+def boundary_fake_quant(x: jax.Array, history: jax.Array, *,
+                        margin: float = 1.0
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Fake-quantize one activation tensor with a delayed per-tensor scale.
+
+    Returns ``(x_q, amax)``: ``x_q`` in ``x.dtype`` holding e4m3-grid
+    values with a straight-through gradient, and the tensor's current
+    fp32 amax (to roll into the history).  A fresh history (all zeros)
+    falls back to just-in-time scaling from the current amax so step 0
+    is sane.
+    """
+    amax = numerics.abs_amax(x)
+    hist_max = jnp.max(history.astype(jnp.float32))
+    ref = jnp.where(hist_max > 0.0, hist_max, amax) * margin
+    scale = jnp.maximum(ref, numerics._EPS) / numerics.FP8_E4M3_MAX
+    scale = jax.lax.stop_gradient(scale)
+    q = numerics.scaled_cast(x, scale, jnp.float8_e4m3fn)
+    deq = numerics.dequantize(q, scale).astype(x.dtype)
+    # STE: forward sees the quantized value, gradient flows as identity.
+    return x + jax.lax.stop_gradient(deq - x), amax
+
+
+def roll_amax_history(history: jax.Array, amax: jax.Array) -> jax.Array:
+    """New history with ``amax`` at [0] (newest-first ring)."""
+    return jnp.concatenate(
+        [amax.reshape(1).astype(history.dtype), history[:-1]])

@@ -1,0 +1,101 @@
+"""QuantizationModifier: low precision for a whole arch in one mesh rule.
+
+The paper's §4.2 claim, applied to precision: turning on fp8 train
+compute, w8a8 quantized linears, and/or a quantized paged KV cache for
+any registered arch is ~10 lines of config — one modifier in a mesh
+rule — never a model edit::
+
+    QuantizationModifier.default_config().set(
+        fp8=True,            # delayed-scaling fp8 compute (Fp8Config ok)
+        w8a8=True,           # Linear -> QuantizedLinear everywhere
+        kv_dtype="int8")     # paged KV pools -> int8 + scale_pool
+
+It composes with the rest of the rule list: apply it *after*
+``DtypePolicyModifier`` (it clones each layer's existing policy and adds
+the fp8 field, so bf16-compute + fp8 boundaries is the natural stack),
+and ZeRO-1 / master weights / grad accumulation need no special casing —
+the amax histories are ordinary tiny replicated params.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+from repro.core.config import ConfigBase, config_class, visit_config
+from repro.core.module import no_context
+from repro.layers.base import DtypePolicy
+from repro.quantization import kv as kv_lib
+from repro.quantization.fp8 import Fp8Config
+from repro.quantization.linear import Int8ConfigModifier
+from repro.trainer.mesh_rules import ConfigModifier
+
+__all__ = ["QuantizationModifier", "set_kv_cache_dtype"]
+
+
+def set_kv_cache_dtype(model_cfg: ConfigBase, name: str, *,
+                       paged_only: bool = False) -> ConfigBase:
+    """Point every attention config's ``kv_cache_dtype`` at a storage
+    dtype by short name ("fp32" | "bf16" | "int8" | "fp8_e4m3").
+
+    The serving/bench-facing entry point for cache quantization: callers
+    name a format, never a dtype. With ``paged_only`` the dense layers
+    (which cannot carry scale rows) keep their configured dtype.
+    """
+    dtype = kv_lib.dtype_by_name(name)
+
+    def visit(path, cfg):
+        if "kv_cache_dtype" not in cfg.keys():
+            return
+        if paged_only and getattr(cfg, "kv_cache_layout", None) != "paged":
+            return
+        cfg.set(kv_cache_dtype=dtype)
+
+    visit_config(model_cfg, visit)
+    return model_cfg
+
+
+class QuantizationModifier(ConfigModifier):
+    """One knob for every low-precision mechanism in the tree."""
+
+    @config_class
+    class Config(ConfigModifier.Config):
+        # fp8 train compute: ``True`` for defaults or an ``Fp8Config``.
+        # Clones each layer's existing dtype_policy and sets its ``fp8``
+        # field, so it layers on top of a prior DtypePolicyModifier.
+        fp8: Optional[Any] = None
+        # Swap every Linear for QuantizedLinear (w8a8).
+        w8a8: bool = False
+        straight_through: bool = True
+        # Paged-KV storage format by short name ("int8" | "fp8_e4m3");
+        # dense layers are left alone (no scale rows in a dense ring).
+        kv_dtype: Optional[str] = None
+
+    @no_context
+    def apply(self, trainer_cfg):
+        c = self.config
+        if c.fp8 is not None and c.fp8 is not False:
+            fp8_cfg = c.fp8 if isinstance(c.fp8, ConfigBase) else Fp8Config()
+            # Layers typically share one policy instance (modifiers set
+            # the same object tree-wide); clone once per distinct
+            # instance so sharing is preserved.
+            cloned = {}
+
+            def add_fp8(path, cfg):
+                if isinstance(cfg, DtypePolicy) or \
+                        "dtype_policy" not in cfg.keys():
+                    return
+                cur = cfg.dtype_policy
+                key = id(cur)
+                if key not in cloned:
+                    base = cur.clone() if cur is not None else DtypePolicy()
+                    cloned[key] = base.set(fp8=fp8_cfg)
+                cfg.set(dtype_policy=cloned[key])
+
+            visit_config(trainer_cfg, add_fp8)
+        if c.w8a8:
+            trainer_cfg = Int8ConfigModifier.default_config().set(
+                straight_through=c.straight_through,
+            ).instantiate().apply(trainer_cfg)
+        if c.kv_dtype is not None:
+            set_kv_cache_dtype(trainer_cfg, c.kv_dtype, paged_only=True)
+        return trainer_cfg

@@ -1,0 +1,81 @@
+"""Scaled low-precision casts shared by every quantization consumer.
+
+Symmetric scaling throughout: a tensor (or a slice of one) is stored as
+``q = round_or_cast(x / scale)`` with ``scale = amax / qmax`` computed in
+fp32 (bf16 inputs lose mantissa bits exactly where the division needs
+them, so the amax/divide always run in fp32 regardless of input dtype).
+Dequantization is ``q * scale``.
+
+This module owns the raw dtype arithmetic; the pool/page framing lives in
+:mod:`repro.quantization.kv` and the delayed-scaling train path in
+:mod:`repro.quantization.fp8`.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "INT8_QMAX",
+    "FP8_E4M3_MAX",
+    "abs_amax",
+    "quantize_int8",
+    "dequantize",
+    "scaled_cast",
+]
+
+INT8_QMAX = 127.0
+# Largest finite float8_e4m3fn value; values are clipped here before the
+# cast because e4m3fn has no inf (overflow would produce NaN).
+FP8_E4M3_MAX = 448.0
+_EPS = 1e-8
+
+Axis = Union[int, Sequence[int], None]
+
+
+def abs_amax(x: jax.Array, axis: Axis = None,
+             keepdims: bool = False) -> jax.Array:
+    """max(|x|) computed in fp32 (safe for bf16/fp16 inputs)."""
+    return jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axis,
+                   keepdims=keepdims)
+
+
+def quantize_int8(x: jax.Array, axis: Axis) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric int8 quantization along ``axis``: returns (q, scale).
+
+    The amax reduction and the division run in fp32 *before* any rounding
+    (a bf16 ``x / scale`` would quantize the quantization step itself).
+    Already-int8 inputs are returned unchanged with unit scales — the
+    no-op guard that makes double quantization safe.
+    """
+    if x.dtype == jnp.int8:
+        shape = list(x.shape)
+        for ax in ((axis,) if isinstance(axis, int) else (axis or ())):
+            shape[ax] = 1
+        return x, jnp.ones(shape, jnp.float32)
+    amax = abs_amax(x, axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, _EPS) / INT8_QMAX
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+                 -INT8_QMAX, INT8_QMAX).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of any symmetric scaled cast: fp32 ``q * scale``."""
+    return q.astype(jnp.float32) * scale.astype(jnp.float32)
+
+
+def scaled_cast(x: jax.Array, scale: jax.Array, dtype: Any) -> jax.Array:
+    """``(x / scale)`` cast to a low-precision storage dtype, with the
+    division in fp32 and the value range clipped to the dtype's finite
+    span (int8 rounds; e4m3fn saturates instead of overflowing to NaN)."""
+    y = x.astype(jnp.float32) / scale.astype(jnp.float32)
+    dt = jnp.dtype(dtype)
+    if dt == jnp.dtype(jnp.int8):
+        y = jnp.clip(jnp.round(y), -INT8_QMAX, INT8_QMAX)
+    elif dt == jnp.dtype(jnp.float8_e4m3fn):
+        y = jnp.clip(y, -FP8_E4M3_MAX, FP8_E4M3_MAX)
+    return y.astype(dt)

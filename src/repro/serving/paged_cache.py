@@ -45,8 +45,13 @@ __all__ = ["BlockAllocator", "PagedCacheManager", "PrefixIndex"]
 
 # Page axis of a pool leaf, keyed by leaf name, expressed as trailing rank:
 # k_pool/v_pool are (..., P, page, Hkv, D) -> page axis at ndim-4;
-# pos_pool is (..., P, page) -> ndim-2.
-_POOL_PAGE_AXIS = {"k_pool": -4, "v_pool": -4, "pos_pool": -2}
+# pos_pool is (..., P, page) -> ndim-2; scale_pool (quantized KV: one fp32
+# scale per token slot per k|v) is (..., P, page, 2) -> ndim-3. Because the
+# scale rows share the physical-page axis, every page op below — COW
+# forks, evict/restore, prefix sharing — moves them atomically with the
+# KV payload by construction.
+_POOL_PAGE_AXIS = {"k_pool": -4, "v_pool": -4, "pos_pool": -2,
+                   "scale_pool": -3}
 NULL_PAGE = 0  # reserved: unmapped table entries clamp here on reads
 
 
@@ -301,6 +306,9 @@ class PagedCacheManager:
         paths = jax.tree_util.tree_flatten_with_path(template_cache)[0]
         self._info: List[_LeafInfo] = []
         self.page_size = self.num_pages = self.n_logical = None
+        # Storage dtype of the KV pools (observability: surfaces quantized
+        # caches in gateway metrics without any dtype branching here).
+        self.pool_dtype: Optional[str] = None
         for (path, leaf), ax in zip(paths, axes_leaves):
             name = ""
             for entry in reversed(path):
@@ -313,6 +321,8 @@ class PagedCacheManager:
                 page_axis = leaf.ndim + _POOL_PAGE_AXIS[name]
                 if name == "pos_pool":
                     self.num_pages, self.page_size = leaf.shape[-2:]
+                elif name == "k_pool":
+                    self.pool_dtype = str(leaf.dtype)
             if name == "page_table":
                 self.n_logical = leaf.shape[-1]
             self._info.append(_LeafInfo(name, int(ax), page_axis))

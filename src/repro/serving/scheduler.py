@@ -240,8 +240,12 @@ class Scheduler:
         # sharing additionally needs every KV byte behind the page pools
         # (dense ring rows are per-slot and cannot be shared).
         names = {i.name for i in self.manager._info}
+        # "scale_pool" is part of the paged attention contract too: it is a
+        # page-axis leaf (per-page dequant scales for quantized pools) that
+        # the manager moves atomically with k_pool/v_pool, so it is as
+        # rewindable and shareable as the payload it describes.
         attn_leaves = {"k", "v", "pos", "k_pool", "v_pool", "pos_pool",
-                       "page_table", "index"}
+                       "page_table", "index", "scale_pool"}
         self.spec_k = int(spec_k) if names <= attn_leaves else 0
         self.spec_ngram = max(int(spec_ngram), 1)
         # The verify window writes spec_k + 1 positions; none may wrap a
@@ -256,7 +260,7 @@ class Scheduler:
         self.prefix: Optional[PrefixIndex] = None
         if (prefix_caching and self.manager.is_paged
                 and names <= {"k_pool", "v_pool", "pos_pool", "page_table",
-                              "index"}):
+                              "index", "scale_pool"}):
             self.prefix = PrefixIndex(self.manager.page_size)
 
         self._slot_seq: List[Optional[_Seq]] = [None] * self.slots

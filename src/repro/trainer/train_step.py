@@ -37,6 +37,7 @@ __all__ = [
     "scalar_summaries",
     "make_loss_fn",
     "make_grad_fn",
+    "apply_state_updates",
     "build_train_step",
     "zero1_partition_spec",
     "constrain_tree",
@@ -134,8 +135,12 @@ def make_loss_fn(model, *, aux_loss_weight: float = 1.0,
             is_training=True)
         aux_total = aggregate_aux_losses(col, aux_loss_pattern)
         total = loss + aux_loss_weight * aux_total
+        # State updates (fp8 amax histories) ride out of the collection
+        # keyed by module path; build_train_step folds them back into the
+        # params after the optimizer update.
         return total, {"loss": loss, "aux_loss": aux_total,
-                       "summaries": scalar_summaries(col)}
+                       "summaries": scalar_summaries(col),
+                       "state_updates": dict(col.state_updates)}
 
     return loss_fn
 
@@ -207,7 +212,17 @@ def make_grad_fn(loss_fn: Callable, *, grad_accum_steps: int = 1,
         grads, parts_stack = jax.lax.scan(microbatch, zero_grads, split)
         inv = 1.0 / accum
         grads = jax.tree.map(lambda g: g * jnp.asarray(inv, g.dtype), grads)
+        # State updates are amax-semantics (fp8 histories): microbatches
+        # combine by elementwise max, not the scalar-metric mean — slot
+        # [0] becomes the step's true amax, the rolled-forward tail is
+        # identical across microbatches so max is the identity there.
+        state_updates = parts_stack.pop("state_updates", {})
         parts = jax.tree.map(lambda x: jnp.mean(x, axis=0), parts_stack)
+        if state_updates:
+            parts["state_updates"] = jax.tree.map(
+                lambda x: jnp.max(x, axis=0), state_updates)
+        else:
+            parts["state_updates"] = {}
         total = parts.pop("_total")
         return total, parts, grads
 
@@ -288,6 +303,37 @@ def combine_microbatch_grads(per_mb_leaves: Sequence[Sequence[Any]],
 # ---------------------------------------------------------------------------
 
 
+def apply_state_updates(params: Dict[str, Any],
+                        updates: Dict[str, Any]) -> Dict[str, Any]:
+    """Folds OutputCollection state updates back into a params tree.
+
+    ``updates`` is keyed by "/"-joined module path (the InvocationContext
+    naming scheme), which maps exactly onto params-dict nesting — Repeat
+    re-emits scan-stacked updates under its ``layer`` subtree so stacked
+    layouts address the same way. Copy-on-write: only the dicts along each
+    updated path are rebuilt. Unknown paths raise (an update implies the
+    leaf existed in the state the forward ran with).
+    """
+
+    def set_path(node, keys, value):
+        key = keys[0]
+        if not isinstance(node, dict) or key not in node:
+            raise KeyError(
+                f"state update path {'/'.join(keys)!r} not found in params")
+        out = dict(node)
+        if len(keys) == 1:
+            old = node[key]
+            out[key] = value.astype(old.dtype) \
+                if hasattr(value, "astype") else value
+        else:
+            out[key] = set_path(node[key], keys[1:], value)
+        return out
+
+    for path, value in updates.items():
+        params = set_path(params, path.split("/"), value)
+    return params
+
+
 def build_train_step(
     model,
     learner,
@@ -317,10 +363,16 @@ def build_train_step(
     def train_step(state: TrainState, batch: Dict[str, Any]):
         step_key = jax.random.fold_in(state["prng_key"], state["step"])
         total, parts, grads = compute_grads(state["params"], batch, step_key)
+        state_updates = parts.pop("state_updates", None)
         new_params, new_opt = learner.apply_updates(
             grads, state["opt_state"], state["params"],
             update_partition_specs=update_partition_specs,
             param_partition_specs=param_partition_specs)
+        if state_updates:
+            # Forward-pass state (fp8 amax histories) overwrites the
+            # optimizer's view of those leaves — they are carried as
+            # params only so they checkpoint/shard like everything else.
+            new_params = apply_state_updates(new_params, state_updates)
         # Norm telemetry: grad/param/update norms are the first things a
         # diverging run's operator looks at, so they come out of every step
         # (computed inside jit — no extra dispatches, no retraces).
