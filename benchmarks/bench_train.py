@@ -36,20 +36,42 @@ BF16_ARCHS = ["qwen2-1.5b", "rwkv6-7b"]
 # "Low-precision end-to-end"; acceptance: <1% relative loss diff).
 FP8_PARITY_ARCH = "qwen2-1.5b"
 FP8_PARITY_STEPS = 60
+# Memory ablation (README "Memory-frugal training"): one arch, deepened to
+# MEMOPT_DEPTH (activation memory is the depth-scaling term reversible
+# blocks remove), fixed global batch, 60-step loss parity columns.
+MEMOPT_ARCH = "qwen2-1.5b"
+MEMOPT_STEPS = 60
+MEMOPT_DEPTH = 8
+# name -> (MemoryModifier kwargs, peak_lr override). LR is a per-optimizer-
+# family tuning constant (Adafactor/SM3 take ~10-100x Adam's LR), not part
+# of the memory ablation itself.
+MEMOPT_CONFIGS = [
+    ("adamw", None, None),
+    ("adamw-bf16-state", {"state_dtype": "bf16"}, None),
+    ("adamw-int8-state", {"state_dtype": "int8"}, None),
+    ("adafactor", {"optimizer": "adafactor"}, 1e-2),
+    ("sm3", {"optimizer": "sm3"}, 1e-1),
+    ("reversible", {"reversible": True}, None),
+]
 
 LAST_JSON = None
 
 
-def _make_trainer(arch, *, policy=None, fp8=False, steps=8, batch=8, seq=32):
+def _make_trainer(arch, *, policy=None, fp8=False, memopt=None, depth=None,
+                  lr=1e-3, steps=8, batch=8, seq=32):
     spec = registry.get_spec(arch)
     model_cfg = spec.make_smoke()
+    if depth is not None:
+        from repro.core.config import update_configs_recursively
+
+        update_configs_recursively(model_cfg, {"num_layers": depth})
     cfg = SpmdTrainer.default_config().set(
         name="t", model=model_cfg, max_steps=steps, log_every_n=steps)
     task = {"audio": "audio", "vlm": "vlm"}.get(spec.modality, "lm")
     cfg.input.set(task=task, vocab_size=model_cfg.decoder.vocab_size,
                   seq_len=seq, global_batch_size=batch,
                   model_dim=model_cfg.decoder.dim, num_patches=4)
-    cfg.learner.optimizer = config_for_function(opt_lib.adamw).set(peak_lr=1e-3)
+    cfg.learner.optimizer = config_for_function(opt_lib.adamw).set(peak_lr=lr)
     if policy is not None:
         from repro.trainer.mesh_rules import DtypePolicyModifier
 
@@ -61,6 +83,11 @@ def _make_trainer(arch, *, policy=None, fp8=False, steps=8, batch=8, seq=32):
 
         cfg = QuantizationModifier.default_config().set(
             fp8=True).instantiate().apply(cfg)
+    if memopt is not None:
+        from repro.memopt.modifier import MemoryModifier
+
+        cfg = MemoryModifier.default_config().set(
+            **memopt).instantiate().apply(cfg)
     return cfg.instantiate()
 
 
@@ -106,6 +133,56 @@ def _train_bench(arch, *, policy=None, fp8=False, steps=8, batch=8, seq=32):
         "peak_hbm_proxy_bytes": cost["peak_hbm_proxy_bytes"],
         "final_loss": float(result["final"]["loss"]),
     }
+
+
+def _memopt_bench(rows):
+    """Memory-frugal training ablation (README "Memory-frugal training").
+
+    One arch at depth MEMOPT_DEPTH, fixed global batch/seq, MEMOPT_STEPS
+    steps per config. Tracked columns per config: exact optimizer state
+    bytes (``train/opt_state_bytes`` accounting), XLA peak-HBM proxy of the
+    compiled step, and 60-step final loss vs the fp32 adamw baseline. The
+    memory ratios are backend-independent (dtype/shape arithmetic); the
+    loss-parity column is the numerics signal.
+    """
+    out = {"arch": MEMOPT_ARCH, "depth": MEMOPT_DEPTH, "steps": MEMOPT_STEPS,
+           "configs": {}}
+    base = None
+    for name, mod, lr in MEMOPT_CONFIGS:
+        trainer = _make_trainer(
+            MEMOPT_ARCH, memopt=mod, depth=MEMOPT_DEPTH, lr=lr or 1e-3,
+            steps=MEMOPT_STEPS, batch=8, seq=64)
+        trainer.run(num_steps=1)  # compile + warm
+        t0 = time.perf_counter()
+        result = trainer.run(num_steps=MEMOPT_STEPS)
+        per_step = (time.perf_counter() - t0) / MEMOPT_STEPS
+        cost = _step_cost(trainer)
+        entry = {
+            "opt_state_bytes": int(result["opt_state_bytes"]),
+            "peak_hbm_proxy_bytes": cost["peak_hbm_proxy_bytes"],
+            "final_loss": float(result["final"]["loss"]),
+            "step_us": per_step * 1e6,
+        }
+        if base is None:
+            base = entry
+        else:
+            entry["opt_bytes_ratio_vs_adamw"] = (
+                base["opt_state_bytes"] / max(entry["opt_state_bytes"], 1))
+            entry["hbm_ratio_vs_adamw"] = (
+                entry["peak_hbm_proxy_bytes"]
+                / max(base["peak_hbm_proxy_bytes"], 1))
+            entry["loss_rel_diff_vs_adamw"] = (
+                abs(entry["final_loss"] - base["final_loss"])
+                / max(abs(base["final_loss"]), 1e-9))
+        out["configs"][name] = entry
+        detail = (f"opt_bytes={entry['opt_state_bytes']};"
+                  f"peak_hbm_proxy={entry['peak_hbm_proxy_bytes']};"
+                  f"loss={entry['final_loss']:.4f}")
+        if base is not entry:
+            detail += (f";opt_shrink={entry['opt_bytes_ratio_vs_adamw']:.1f}x;"
+                       f"loss_rel_diff={entry['loss_rel_diff_vs_adamw']:.4f}")
+        rows.append((f"train_memopt/{name}", entry["step_us"], detail))
+    return out
 
 
 def _fleet_bench(*, world=2, steps=6):
@@ -216,8 +293,9 @@ def run():
     rows.append((f"train_fp8_parity/{FP8_PARITY_ARCH}", fp8["step_us"],
                  f"steps={FP8_PARITY_STEPS};"
                  f"loss_rel_diff_vs_bf16={loss_rel:.4f}"))
+    memopt_json = _memopt_bench(rows)
     LAST_JSON = {"archs": archs_json, "roofline": roofline,
-                 "fp8_train_parity": fp8_json}
+                 "fp8_train_parity": fp8_json, "memopt": memopt_json}
     fleet = _fleet_bench()
     if fleet is not None:  # fleet fields only when the elastic path ran
         LAST_JSON["fleet"] = fleet

@@ -20,6 +20,7 @@ from repro.configs import registry
 from repro.core.config import config_for_function
 from repro.trainer import optimizers as opt_lib
 from repro.layers.base import bf16_policy
+from repro.memopt.modifier import MemoryModifier
 from repro.quantization.modifier import QuantizationModifier
 from repro.trainer.mesh_rules import (
     DtypePolicyModifier,
@@ -59,6 +60,36 @@ MESH_RULES = [
         DtypePolicyModifier.default_config().set(policy=bf16_policy()),
         Zero1Modifier.default_config(),
         QuantizationModifier.default_config().set(fp8=True),
+    ]),
+    # Memory-frugal variants: same recipe plus ONE MemoryModifier (paper
+    # §4.2 applied to training memory). "-frugal" = bf16 Adam EMA buffers +
+    # reversible residual stacks (2x smaller moments, O(1)-in-depth
+    # activations); "-frugal-max" = Adafactor factored second moments +
+    # reversible (optimizer state drops from 8 bytes/param to O(n+m) per
+    # matrix). Both compose with the rule's ZeRO-1 + bf16 policy.
+    ("tpu-v5e-.*-frugal-max", [
+        MeshShapeModifier.default_config().set(
+            mesh_shape=(16, 16), mesh_axis_names=("data", "model")),
+        RematPolicyModifier.default_config().set(policy="full"),
+        KernelModifier.default_config().set(
+            op_overrides={"attention.fwd": "pallas"},
+            update={"block_q": 256, "block_k": 512}),
+        DtypePolicyModifier.default_config().set(policy=bf16_policy()),
+        Zero1Modifier.default_config(),
+        MemoryModifier.default_config().set(
+            optimizer="adafactor", reversible=True),
+    ]),
+    ("tpu-v5e-.*-frugal", [
+        MeshShapeModifier.default_config().set(
+            mesh_shape=(16, 16), mesh_axis_names=("data", "model")),
+        RematPolicyModifier.default_config().set(policy="full"),
+        KernelModifier.default_config().set(
+            op_overrides={"attention.fwd": "pallas"},
+            update={"block_q": 256, "block_k": 512}),
+        DtypePolicyModifier.default_config().set(policy=bf16_policy()),
+        Zero1Modifier.default_config(),
+        MemoryModifier.default_config().set(
+            state_dtype="bf16", reversible=True),
     ]),
     ("tpu-v5e-.*-w8a8", [
         MeshShapeModifier.default_config().set(

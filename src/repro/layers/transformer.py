@@ -86,6 +86,31 @@ class TransformerLayer(BaseLayer):
             h = self.post_ffn_norm(h)
         return x + self._maybe_dropout(h)
 
+    # Residual-branch interface (the reversible decomposition): forward() is
+    # exactly x + attn_branch(x) followed by x + ffn_branch(x). A two-stream
+    # reversible stack (repro.memopt.reversible) calls the branches WITHOUT
+    # the residual adds — their presence is what marks a layer invertible.
+
+    def attn_branch(self, x, positions: Optional[jax.Array] = None):
+        """F(x) = attn(norm(x)) — the attention residual branch alone."""
+        cfg = self.config
+        x = self._to_compute(x)
+        x = self._shard(x, cfg.activation_partition)
+        h = self.self_attention(self.attn_norm(x), positions=positions)
+        if cfg.use_post_attention_norm:
+            h = self.post_attn_norm(h)
+        return self._shard(h, cfg.activation_partition)
+
+    def ffn_branch(self, x):
+        """G(x) = ffn(norm(x)) — the feed-forward residual branch alone."""
+        cfg = self.config
+        x = self._to_compute(x)
+        x = self._shard(x, cfg.activation_partition)
+        h = self.feed_forward(self.ffn_norm(x))
+        if cfg.use_post_ffn_norm:
+            h = self.post_ffn_norm(h)
+        return self._shard(h, cfg.activation_partition)
+
     def forward(self, x: jax.Array, positions: Optional[jax.Array] = None) -> jax.Array:
         cfg = self.config
         x = self._to_compute(x)  # residual stream runs in the compute dtype
@@ -236,6 +261,13 @@ class Repeat(BaseLayer):
         # dry-run so cost_analysis counts every layer (XLA tallies a while
         # body once), at the cost of larger HLO.
         scan_unroll: Any = 1
+        # Reversible two-stream residual stack (repro.memopt.reversible):
+        # the backward pass reconstructs activations from the layers'
+        # invertible structure instead of saving them — O(1) activation
+        # memory in depth, superseding remat_policy inside this stack.
+        # Requires an invertible inner layer (attn_branch/ffn_branch, zero
+        # residual dropout); training-side only (decode paths raise).
+        reversible: bool = False
 
     def __init__(self, cfg, *, parent=None):
         super().__init__(cfg, parent=parent)
@@ -243,6 +275,10 @@ class Repeat(BaseLayer):
         if "dtype_policy" in layer.keys():
             maybe_set(layer, dtype_policy=self.config.dtype_policy)
         self._add_child("layer", layer)
+        if cfg.reversible:
+            from repro.memopt.reversible import validate_reversible
+
+            validate_reversible(self.layer)  # fail at build, not in-step
 
     # --- stacked params ------------------------------------------------------
 
@@ -324,9 +360,26 @@ class Repeat(BaseLayer):
     # --- public interface -------------------------------------------------------
 
     def forward(self, x, positions=None):
+        if self.config.reversible:
+            from repro.memopt.reversible import reversible_forward
+
+            # Side outputs from inner layers are dropped here (documented
+            # in repro.memopt.reversible): the custom_vjp boundary cannot
+            # re-emit per-layer collections.
+            return reversible_forward(self, x, positions=positions)
         y, side = self._scan("forward", x, positions=positions)
         self._reemit(side)
         return y
+
+    def _check_not_reversible(self, method: str):
+        if self.config.reversible:
+            raise NotImplementedError(
+                f"Repeat.{method} is not available on a reversible stack: "
+                "reversible=True is a training/scoring-memory knob "
+                "(forward-only); the incremental decode interface has no "
+                "two-stream layout. Export/serve such models through "
+                "forward(), or train with reversible=False when the "
+                "checkpoint must serve through prefill/extend_step.")
 
     @no_context
     def state_partition_specs(self, *_):
@@ -342,6 +395,7 @@ class Repeat(BaseLayer):
         return rec(inner)
 
     def init_states(self, batch_size: int, max_len: int):
+        self._check_not_reversible("init_states")
         proto, _ = functional(
             self.layer, state={}, inputs=(batch_size, max_len),
             is_training=False, method="init_states")
@@ -350,12 +404,14 @@ class Repeat(BaseLayer):
                             if hasattr(a, "shape") else a, proto)
 
     def prefill(self, state, x, positions=None, length=None):
+        self._check_not_reversible("prefill")
         y, ys = self._scan("prefill", x, per_layer_state=state,
                            positions=positions, length=length)
         self._reemit(ys["side"])
         return ys["state"], y
 
     def extend_step(self, state, x_step):
+        self._check_not_reversible("extend_step")
         y, ys = self._scan("extend_step", x_step, per_layer_state=state)
         self._reemit(ys["side"])
         return ys["state"], y

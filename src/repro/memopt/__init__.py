@@ -1,0 +1,45 @@
+"""Memory-frugal training: optimizer-state and activation bytes as config.
+
+Mirrors how :mod:`repro.quantization` made *precision* a config axis — this
+subsystem does the same for *training memory*, the binding constraint on max
+trainable model size per host (per-device optimizer + activation bytes):
+
+  * :mod:`repro.memopt.factored` — Adafactor-style row/column-factored and
+    SM3 rank-1 second moments: O(n+m) accumulators instead of Adam's two
+    O(n*m) EMA buffers, in the trainer's ``GradientTransformation`` protocol.
+  * :mod:`repro.memopt.state_quant` — bf16 / int8(+fp32-scale) storage for
+    Adam's EMA buffers behind the ``state_dtype`` knob on ``adamw`` (the
+    int8 path reuses :mod:`repro.quantization.numerics`). Quantized moment
+    trees stay param-structured so ZeRO-1 keeps sharding them.
+  * :mod:`repro.memopt.reversible` — reversible two-stream residual stacks
+    (``Repeat.Config.reversible``): activations are *recomputed from the
+    block's invertible structure* in the backward pass (``jax.custom_vjp``),
+    so activation memory is O(1) in depth instead of O(L).
+  * :mod:`repro.memopt.accounting` — exact state-bytes accounting
+    (``state_bytes`` / ``per_leaf_state_bytes`` / ``per_device_state_bytes``)
+    exported by the trainer as ``train/opt_state_bytes`` gauges.
+  * :mod:`repro.memopt.modifier` — one :class:`MemoryModifier` (optimizer
+    choice / state_dtype / reversible) wired into ``-frugal`` mesh rules.
+
+Contract: optimizer-state dtype *names* ("fp32", "bf16", "int8") are
+interpreted ONLY here (grep-enforced by tests/test_memopt.py) — everything
+else threads them through config.
+"""
+
+from repro.memopt.accounting import (
+    per_device_state_bytes,
+    per_leaf_state_bytes,
+    state_bytes,
+)
+from repro.memopt.factored import adafactor, sm3
+from repro.memopt.state_quant import resolve_state_dtype, scale_by_adam_state_dtype
+
+__all__ = [
+    "adafactor",
+    "sm3",
+    "state_bytes",
+    "per_leaf_state_bytes",
+    "per_device_state_bytes",
+    "resolve_state_dtype",
+    "scale_by_adam_state_dtype",
+]

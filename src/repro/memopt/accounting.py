@@ -1,0 +1,60 @@
+"""Exact optimizer-state byte accounting.
+
+Works on concrete arrays AND ``jax.ShapeDtypeStruct`` trees (the trainer
+calls it on ``eval_shape`` output, so the gauges cost no device transfer).
+"Exact" means counted from the realized state tree — every leaf of every
+transform's state (moments, factored accumulators, quantization scales,
+schedule counts), not an estimate from a formula.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["state_bytes", "per_leaf_state_bytes", "per_device_state_bytes"]
+
+
+def _leaf_bytes(leaf: Any) -> int:
+    if not hasattr(leaf, "dtype"):
+        return 0
+    size = getattr(leaf, "size", None)
+    if size is None:
+        size = int(np.prod(getattr(leaf, "shape", ())))
+    return int(size) * np.dtype(leaf.dtype).itemsize
+
+
+def state_bytes(opt_state: Any) -> int:
+    """Total bytes of every array leaf in an optimizer-state pytree."""
+    return sum(_leaf_bytes(l) for l in jax.tree.leaves(opt_state))
+
+
+def per_leaf_state_bytes(opt_state: Any) -> Dict[str, int]:
+    """Exact bytes per state leaf, keyed by the leaf's tree path (e.g.
+    ``.mu['decoder']['stack']['layer'][...]``) — the per-leaf report each
+    GradientTransformation's state contributes."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(opt_state)
+    return {jax.tree_util.keystr(path): _leaf_bytes(leaf)
+            for path, leaf in flat}
+
+
+def per_device_state_bytes(opt_state: Any, shardings: Any) -> Optional[int]:
+    """Bytes of the optimizer state resident on ONE device under
+    ``shardings`` (a matching tree of NamedShardings; replicated leaves count
+    in full, ZeRO-1-partitioned leaves at 1/N). Returns None when any
+    sharding is missing (no mesh)."""
+    leaves = jax.tree.leaves(opt_state)
+    shard_leaves = jax.tree.leaves(shardings, is_leaf=lambda s: s is None)
+    if len(leaves) != len(shard_leaves):
+        return None
+    total = 0
+    for leaf, sh in zip(leaves, shard_leaves):
+        if not hasattr(leaf, "dtype"):
+            continue
+        if sh is None or not hasattr(sh, "shard_shape"):
+            return None
+        shape = sh.shard_shape(tuple(leaf.shape))
+        total += int(np.prod(shape)) * np.dtype(leaf.dtype).itemsize
+    return total

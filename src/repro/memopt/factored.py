@@ -1,0 +1,241 @@
+"""Factored second-moment optimizers: Adafactor (row/column) and SM3 (rank-1).
+
+Both follow the trainer's ``GradientTransformation`` protocol and compose
+with the same ``chain`` pieces ``adamw`` uses (global-norm clip, decoupled
+weight decay with per-param scales from ``ParameterSpec``, LR schedule).
+
+Memory layout deliberately differs from Adam's: the accumulators are NOT
+param-shaped, so they live in flat dicts keyed by leaf index. Under ZeRO-1
+the trainer's ``opt_state_shardings`` then replicates them (their tree
+structure never matches the params tree) — which is fine, because O(n+m)
+row/column vectors ARE the memory win: for a stacked ``(L, n, m)`` weight,
+Adafactor keeps ``L*(n+m)`` floats where Adam keeps ``2*L*n*m``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.trainer.optimizers import (
+    GradientTransformation,
+    add_decayed_weights,
+    chain,
+    clip_by_global_norm,
+    constant_schedule,
+    scale_by_schedule,
+)
+
+__all__ = ["adafactor", "sm3", "scale_by_factored_rms", "scale_by_sm3"]
+
+
+def _leaf_key(i: int) -> str:
+    return f"{i:04d}"
+
+
+# ------------------------------- Adafactor ----------------------------------
+
+
+class FactoredState(NamedTuple):
+    """Second-moment state: factored ``(v_row, v_col)`` pairs for >=2-d
+    leaves, a full accumulator for the (tiny) rest. All three are flat dicts
+    keyed by flattened-leaf index — intentionally not param-structured."""
+
+    count: jax.Array
+    v_row: Dict[str, jax.Array]
+    v_col: Dict[str, jax.Array]
+    v_full: Dict[str, jax.Array]
+
+
+def _factors(shape: Tuple[int, ...], min_dim_size_to_factor: int) -> bool:
+    return len(shape) >= 2 and min(shape[-2:]) >= min_dim_size_to_factor
+
+
+def scale_by_factored_rms(b2_cap: float = 0.999, eps: float = 1e-30,
+                          clip_threshold: float = 1.0,
+                          min_dim_size_to_factor: int = 8
+                          ) -> GradientTransformation:
+    """Adafactor's factored RMS preconditioner (Shazeer & Stern 2018).
+
+    For a ``(..., n, m)`` leaf the second moment is approximated by the
+    rank-1 outer product of row/column EMAs (leading dims — e.g. Repeat's
+    stacked layer axis — are batch dims, so each scanned layer keeps its own
+    factors). Decay follows the paper's step-dependent schedule
+    ``b2(t) = min(b2_cap, 1 - t^-0.8)``; updates are RMS-clipped at
+    ``clip_threshold`` (the paper's update-clipping, which is why there is
+    no global-norm clip in :func:`adafactor` by default).
+    """
+
+    def init(params):
+        leaves = jax.tree.leaves(params)
+        v_row, v_col, v_full = {}, {}, {}
+        for i, p in enumerate(leaves):
+            k = _leaf_key(i)
+            if _factors(p.shape, min_dim_size_to_factor):
+                v_row[k] = jnp.zeros(p.shape[:-1], jnp.float32)
+                v_col[k] = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            else:
+                v_full[k] = jnp.zeros(p.shape, jnp.float32)
+        return FactoredState(count=jnp.zeros((), jnp.int32),
+                             v_row=v_row, v_col=v_col, v_full=v_full)
+
+    def update(grads, state, params):
+        count = state.count + 1
+        t = count.astype(jnp.float32)
+        b2 = jnp.minimum(b2_cap, 1.0 - t ** -0.8)
+        g_leaves, treedef = jax.tree_util.tree_flatten(grads)
+        v_row, v_col, v_full = (dict(state.v_row), dict(state.v_col),
+                                dict(state.v_full))
+        updates = []
+        for i, g in enumerate(g_leaves):
+            k = _leaf_key(i)
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if k in v_row:
+                vr = b2 * v_row[k] + (1 - b2) * jnp.mean(g2, axis=-1)
+                vc = b2 * v_col[k] + (1 - b2) * jnp.mean(g2, axis=-2)
+                v_row[k], v_col[k] = vr, vc
+                # V-hat = (vr/mean(vr)) (x) vc; precondition by rsqrt of it.
+                r = jax.lax.rsqrt(
+                    vr / jnp.mean(vr, axis=-1, keepdims=True))
+                c = jax.lax.rsqrt(vc)
+                u = g32 * r[..., :, None] * c[..., None, :]
+            else:
+                v = b2 * v_full[k] + (1 - b2) * g2
+                v_full[k] = v
+                u = g32 * jax.lax.rsqrt(v)
+            # Update clipping: divide by max(1, RMS(u)/d).
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)))
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            updates.append(u)
+        new_state = FactoredState(count=count, v_row=v_row, v_col=v_col,
+                                  v_full=v_full)
+        return jax.tree_util.tree_unflatten(treedef, updates), new_state
+
+    return GradientTransformation(init, update)
+
+
+def adafactor(
+    learning_rate: Optional[Callable] = None,
+    peak_lr: float = 1e-2,
+    b2_cap: float = 0.999,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    min_dim_size_to_factor: int = 8,
+    weight_decay: float = 0.0,
+    weight_decay_scales: Optional[Any] = None,
+    max_grad_norm: Optional[float] = None,
+) -> GradientTransformation:
+    """Adafactor: Adam-quality adaptivity at O(n+m) second-moment memory.
+
+    No first moment and factored second moments: optimizer state shrinks
+    from Adam's 8 bytes/param to ~``4*(n+m)/(n*m)`` bytes/param for matrix
+    leaves. ``max_grad_norm`` defaults to None because the transform clips
+    per-leaf update RMS instead (the paper's recommendation).
+    """
+    schedule = learning_rate or constant_schedule(peak_lr)
+    parts = []
+    if max_grad_norm is not None:
+        parts.append(clip_by_global_norm(max_grad_norm))
+    parts.append(scale_by_factored_rms(
+        b2_cap=b2_cap, eps=eps, clip_threshold=clip_threshold,
+        min_dim_size_to_factor=min_dim_size_to_factor))
+    if weight_decay:
+        parts.append(add_decayed_weights(weight_decay, weight_decay_scales))
+    parts.append(scale_by_schedule(lambda step: -schedule(step)))
+    return chain(*parts)
+
+
+# ---------------------------------- SM3 -------------------------------------
+
+
+class SM3State(NamedTuple):
+    """Rank-1 accumulators: one vector per tensor axis (``accumulators[leaf
+    key][axis index]`` has shape ``(d_axis,)``), O(sum d_i) per leaf. Flat
+    dict keyed by leaf index — intentionally not param-structured."""
+
+    count: jax.Array
+    accumulators: Dict[str, Dict[str, jax.Array]]
+
+
+def _sm3_min(accs: Dict[str, jax.Array], shape: Tuple[int, ...]) -> jax.Array:
+    """Elementwise min over the per-axis accumulators, each broadcast to the
+    full tensor shape (the SM3 cover estimate of the second moment)."""
+    ndim = len(shape)
+    est = None
+    for ax_s, a in accs.items():
+        ax = int(ax_s)
+        bshape = [1] * ndim
+        bshape[ax] = shape[ax]
+        b = a.reshape(bshape)
+        est = b if est is None else jnp.minimum(est, b)
+    return jnp.broadcast_to(est, shape)
+
+
+def scale_by_sm3(eps: float = 1e-8) -> GradientTransformation:
+    """SM3-II (Anil et al. 2019): AdaGrad-style adaptivity from one
+    accumulator vector per tensor axis instead of a full-shape accumulator.
+
+    nu <- min_i(broadcast a_i) + g^2; a_i <- max over the other axes of nu;
+    update = g / sqrt(nu + eps). Memory is O(sum_i d_i) per leaf — the
+    rank-1 cover — vs AdaGrad/Adam's O(prod_i d_i).
+    """
+
+    def init(params):
+        accs: Dict[str, Dict[str, jax.Array]] = {}
+        for i, p in enumerate(jax.tree.leaves(params)):
+            shape = p.shape if p.ndim else (1,)
+            accs[_leaf_key(i)] = {
+                str(ax): jnp.zeros((shape[ax],), jnp.float32)
+                for ax in range(len(shape))}
+        return SM3State(count=jnp.zeros((), jnp.int32), accumulators=accs)
+
+    def update(grads, state, params):
+        g_leaves, treedef = jax.tree_util.tree_flatten(grads)
+        new_accs = {}
+        updates = []
+        for i, g in enumerate(g_leaves):
+            k = _leaf_key(i)
+            g32 = g.astype(jnp.float32)
+            shaped = g32.reshape((1,)) if g32.ndim == 0 else g32
+            nu = _sm3_min(state.accumulators[k], shaped.shape)
+            nu = nu + jnp.square(shaped)
+            ndim = shaped.ndim
+            new_accs[k] = {
+                str(ax): jnp.max(nu, axis=tuple(a for a in range(ndim)
+                                                if a != ax))
+                for ax in range(ndim)}
+            u = shaped * jax.lax.rsqrt(nu + eps)
+            updates.append(u.reshape(g.shape))
+        new_state = SM3State(count=state.count + 1, accumulators=new_accs)
+        return jax.tree_util.tree_unflatten(treedef, updates), new_state
+
+    return GradientTransformation(init, update)
+
+
+def sm3(
+    learning_rate: Optional[Callable] = None,
+    peak_lr: float = 1e-1,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    weight_decay_scales: Optional[Any] = None,
+    max_grad_norm: Optional[float] = 1.0,
+) -> GradientTransformation:
+    """SM3 with the trainer's usual clip/decay/schedule chain.
+
+    AdaGrad-flavoured: typical peak LRs are ~100x Adam's (the accumulator
+    sum grows unboundedly, shrinking the effective step over time).
+    Momentum is deliberately not offered — it would re-add a param-sized
+    buffer and erase the memory win this optimizer exists for.
+    """
+    schedule = learning_rate or constant_schedule(peak_lr)
+    parts = []
+    if max_grad_norm is not None:
+        parts.append(clip_by_global_norm(max_grad_norm))
+    parts.append(scale_by_sm3(eps=eps))
+    if weight_decay:
+        parts.append(add_decayed_weights(weight_decay, weight_decay_scales))
+    parts.append(scale_by_schedule(lambda step: -schedule(step)))
+    return chain(*parts)

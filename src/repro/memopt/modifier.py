@@ -1,0 +1,79 @@
+"""MemoryModifier: the whole memory-frugal recipe as one mesh-rule entry.
+
+Mirrors ``QuantizationModifier``: a single ConfigModifier that rewrites the
+trainer config — optimizer choice (adamw / adafactor / sm3, preserving the
+schedule and decay already configured), quantized Adam state storage
+(``state_dtype``), and reversible residual stacks — so an instance-type
+suffix like ``-frugal`` is ~10 lines of config and zero model-code changes.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.config import (
+    RequiredFieldValue,
+    config_class,
+    config_for_function,
+    update_configs_recursively,
+)
+from repro.core.module import no_context
+from repro.memopt import factored
+from repro.trainer import optimizers as opt_lib
+from repro.trainer.mesh_rules import ConfigModifier
+
+__all__ = ["MemoryModifier"]
+
+_OPTIMIZERS = {
+    "adamw": opt_lib.adamw,
+    "adafactor": factored.adafactor,
+    "sm3": factored.sm3,
+}
+
+# Fields carried over when swapping the optimizer factory (schedule / decay
+# are experiment choices, not memory choices).
+_CARRY_FIELDS = ("learning_rate", "peak_lr", "weight_decay",
+                 "weight_decay_scales", "max_grad_norm")
+
+
+class MemoryModifier(ConfigModifier):
+    @config_class
+    class Config(ConfigModifier.Config):
+        # "adamw" | "adafactor" | "sm3"; None keeps the configured optimizer.
+        optimizer: Optional[str] = None
+        # Adam EMA storage: "fp32" | "bf16" | "int8" (resolved inside
+        # repro.memopt.state_quant). Requires an adamw-family optimizer.
+        state_dtype: Optional[str] = None
+        # Sets reversible=... on every Repeat stack in the model tree.
+        reversible: Optional[bool] = None
+
+    @no_context
+    def apply(self, trainer_cfg):
+        c = self.config
+        if c.optimizer is not None:
+            if c.optimizer not in _OPTIMIZERS:
+                raise ValueError(
+                    f"MemoryModifier.optimizer={c.optimizer!r}; expected one "
+                    f"of {sorted(_OPTIMIZERS)}")
+            old = trainer_cfg.learner.optimizer
+            new = config_for_function(_OPTIMIZERS[c.optimizer])
+            if old is not None:
+                for field in _CARRY_FIELDS:
+                    if field in old.keys() and field in new.keys():
+                        value = getattr(old, field)
+                        if value is not None and not isinstance(
+                                value, RequiredFieldValue):
+                            new.set(**{field: value})
+            trainer_cfg.learner.optimizer = new
+        if c.state_dtype is not None:
+            opt = trainer_cfg.learner.optimizer
+            if opt is None or "state_dtype" not in opt.keys():
+                raise ValueError(
+                    f"MemoryModifier.state_dtype={c.state_dtype!r} needs an "
+                    "adamw-family optimizer (factored optimizers keep no "
+                    f"Adam EMA buffers to quantize); got {opt}")
+            opt.set(state_dtype=c.state_dtype)
+        if c.reversible is not None:
+            update_configs_recursively(
+                trainer_cfg, {"reversible": c.reversible})
+        return trainer_cfg

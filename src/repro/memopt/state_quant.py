@@ -1,0 +1,150 @@
+"""Quantized Adam EMA storage behind ``adamw(state_dtype=...)``.
+
+The ONLY module that interprets optimizer state-dtype names:
+
+  * ``"fp32"`` / ``"bf16"`` — plain low-precision moment storage
+    (delegates to ``scale_by_adam(moment_dtype=...)``; bf16 halves the
+    8 bytes/param EMA footprint).
+  * ``"int8"`` — 8-bit Adam: moments stored int8 with per-row fp32 scales
+    (last-axis symmetric quantization via
+    :func:`repro.quantization.numerics.quantize_int8`); the EMA update
+    dequantizes, accumulates in fp32, and requantizes, so the *update
+    math* always runs full-precision on the freshly-accumulated values.
+
+ZeRO-1 composition is a structural invariant: the int8 ``mu``/``nu`` trees
+are built with the params treedef (same shapes, smaller dtype), so the
+trainer's ``opt_state_shardings`` structure-match assigns them the ZeRO-1
+NamedShardings and they keep sharding along the data axes. The fp32 scales
+live in a flat dict keyed by leaf index — a tree that deliberately does NOT
+match the params structure, so those (tiny, differently-shaped) leaves fall
+through to replication instead of crashing on shape-mismatched param
+shardings.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.quantization.numerics import dequantize, quantize_int8
+from repro.trainer import optimizers as opt_lib
+
+__all__ = [
+    "resolve_state_dtype",
+    "scale_by_adam_state_dtype",
+    "scale_by_adam_int8",
+    "QuantizedAdamState",
+]
+
+# Sanctioned state-dtype names -> (storage dtype, quantized?). Names, not
+# raw dtypes, are the config surface (the grep contract keeps both the
+# names' interpretation and the dtype literals inside memopt/).
+_STATE_DTYPES = {
+    "fp32": (jnp.float32, False),
+    "float32": (jnp.float32, False),
+    "bf16": (jnp.bfloat16, False),
+    "bfloat16": (jnp.bfloat16, False),
+    "int8": (jnp.int8, True),
+}
+
+
+def resolve_state_dtype(name: str) -> Tuple[Any, bool]:
+    """``"fp32" | "bf16" | "int8"`` -> (storage dtype, quantized?)."""
+    key = str(name).lower()
+    if key not in _STATE_DTYPES:
+        raise ValueError(
+            f"Unknown optimizer state_dtype {name!r}; expected one of "
+            f"{sorted(set(_STATE_DTYPES))}")
+    return _STATE_DTYPES[key]
+
+
+def scale_by_adam_state_dtype(b1: float, b2: float, eps: float,
+                              state_dtype: str) -> opt_lib.GradientTransformation:
+    """The ``adamw(state_dtype=...)`` implementation hook: resolves the
+    state-dtype name and returns the matching Adam moment transform."""
+    dtype, quantized = resolve_state_dtype(state_dtype)
+    if quantized:
+        return scale_by_adam_int8(b1=b1, b2=b2, eps=eps)
+    return opt_lib.scale_by_adam(b1=b1, b2=b2, eps=eps, moment_dtype=dtype)
+
+
+class QuantizedAdamState(NamedTuple):
+    """``mu``/``nu``: int8, param-structured (ZeRO-1 shards them).
+    ``scales``: flat ``{"mu0000": ..., "nu0000": ...}`` fp32 per-row scales
+    (non-param-structured by design -> replicated, and tiny: 4/m bytes per
+    moment element for a last-axis size of m)."""
+
+    count: jax.Array
+    mu: Any
+    nu: Any
+    scales: Dict[str, jax.Array]
+
+
+def _qaxis(leaf) -> Optional[int]:
+    return -1 if getattr(leaf, "ndim", 0) >= 1 else None
+
+
+def _scale_shape(leaf) -> Tuple[int, ...]:
+    if getattr(leaf, "ndim", 0) >= 1:
+        return tuple(leaf.shape[:-1]) + (1,)
+    return ()
+
+
+def scale_by_adam_int8(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8
+                       ) -> opt_lib.GradientTransformation:
+    """8-bit Adam: int8 moments + per-row fp32 scales (~4x smaller EMA
+    buffers than fp32, ~6/8 of total state bytes saved before masters).
+
+    Accuracy note: the *current-step* m/v used for the update are the fp32
+    EMA results (quantization error enters only through the carried state),
+    which is what keeps short-horizon loss curves near the fp32 ones.
+    """
+
+    def init(params):
+        leaves, treedef = jax.tree_util.tree_flatten(params)
+        # Distinct arrays per leaf (no aliasing): the trainer donates the
+        # whole state to the jitted step, and a buffer appearing twice in
+        # the donation set is an XLA error.
+        mu = jax.tree_util.tree_unflatten(
+            treedef, [jnp.zeros(p.shape, jnp.int8) for p in leaves])
+        nu = jax.tree_util.tree_unflatten(
+            treedef, [jnp.zeros(p.shape, jnp.int8) for p in leaves])
+        scales = {}
+        for i, p in enumerate(leaves):
+            scales[f"mu{i:04d}"] = jnp.ones(_scale_shape(p), jnp.float32)
+            scales[f"nu{i:04d}"] = jnp.ones(_scale_shape(p), jnp.float32)
+        return QuantizedAdamState(count=jnp.zeros((), jnp.int32),
+                                  mu=mu, nu=nu, scales=scales)
+
+    def update(grads, state, params):
+        count = state.count + 1
+        g_leaves, treedef = jax.tree_util.tree_flatten(grads)
+        mu_leaves = jax.tree.leaves(state.mu)
+        nu_leaves = jax.tree.leaves(state.nu)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+        new_mu, new_nu, updates = [], [], []
+        scales = dict(state.scales)
+        for i, g in enumerate(g_leaves):
+            k_mu, k_nu = f"mu{i:04d}", f"nu{i:04d}"
+            g32 = g.astype(jnp.float32)
+            m = b1 * dequantize(mu_leaves[i], scales[k_mu]) + (1 - b1) * g32
+            v = (b2 * dequantize(nu_leaves[i], scales[k_nu])
+                 + (1 - b2) * jnp.square(g32))
+            updates.append((m / c1) / (jnp.sqrt(v / c2) + eps))
+            q_m, s_m = quantize_int8(m, _qaxis(g))
+            q_v, s_v = quantize_int8(v, _qaxis(g))
+            new_mu.append(q_m)
+            new_nu.append(q_v)
+            scales[k_mu] = s_m.reshape(_scale_shape(g))
+            scales[k_nu] = s_v.reshape(_scale_shape(g))
+        new_state = QuantizedAdamState(
+            count=count,
+            mu=jax.tree_util.tree_unflatten(treedef, new_mu),
+            nu=jax.tree_util.tree_unflatten(treedef, new_nu),
+            scales=scales)
+        return jax.tree_util.tree_unflatten(treedef, updates), new_state
+
+    return opt_lib.GradientTransformation(init, update)

@@ -37,10 +37,41 @@ class GradientTransformation(NamedTuple):
 
 
 def chain(*transforms: GradientTransformation) -> GradientTransformation:
+    """Composes transforms; state is a tuple with one entry per transform.
+
+    ``update`` validates the state against the chain before threading it:
+    a state from a different optimizer config (e.g. a checkpoint restored
+    after the chain changed length, or a bare inner-transform state) used
+    to fail as a deep tree mismatch inside some transform — or worse,
+    ``zip`` silently DROPPED trailing transforms' state. Now it raises a
+    targeted error at the chain boundary.
+    """
+    n = len(transforms)
+    expected = {"treedef": None}  # captured at init; checked on update
+
     def init(params):
-        return tuple(t.init(params) for t in transforms)
+        state = tuple(t.init(params) for t in transforms)
+        expected["treedef"] = jax.tree.structure(state)
+        return state
 
     def update(grads, state, params):
+        if not isinstance(state, tuple) or len(state) != n:
+            got = (f"a tuple of length {len(state)}"
+                   if isinstance(state, tuple) else
+                   f"a {type(state).__name__}")
+            raise ValueError(
+                f"chain() of {n} transforms got an optimizer state that is "
+                f"{got}; the state does not match this optimizer chain — "
+                "was a checkpoint restored from a different optimizer "
+                "config?")
+        if expected["treedef"] is not None:
+            got_def = jax.tree.structure(state)
+            if got_def != expected["treedef"]:
+                raise ValueError(
+                    "optimizer state structure does not match this chain "
+                    f"(expected {expected['treedef']}, got {got_def}) — "
+                    "was a checkpoint restored from a different optimizer "
+                    "config?")
         new_state = []
         for t, s in zip(transforms, state):
             grads, s = t.update(grads, s, params)
@@ -232,9 +263,17 @@ def adamw(
     weight_decay_scales: Optional[Any] = None,
     max_grad_norm: Optional[float] = 1.0,
     moment_dtype=jnp.float32,
+    state_dtype: Optional[str] = None,
     master_weight_dtype: Optional[Any] = None,
 ) -> GradientTransformation:
     """AdamW with optional clipping + schedule; final update is negative.
+
+    ``state_dtype`` ("fp32" | "bf16" | "int8") selects the EMA-buffer
+    storage by *name*; the names are resolved inside
+    :mod:`repro.memopt.state_quant` (bf16 halves, int8(+fp32 scales)
+    quarters the 8 bytes/param moment footprint) and the quantized trees
+    stay param-structured so ZeRO-1 keeps sharding them. Takes precedence
+    over the legacy ``moment_dtype`` when set.
 
     ``master_weight_dtype`` (e.g. fp32 when the dtype policy stores params
     in bf16) wraps the whole chain in :func:`with_master_weights`: moments
@@ -245,7 +284,16 @@ def adamw(
     parts = []
     if max_grad_norm is not None:
         parts.append(clip_by_global_norm(max_grad_norm))
-    parts.append(scale_by_adam(b1=b1, b2=b2, eps=eps, moment_dtype=moment_dtype))
+    if state_dtype is not None:
+        # Lazy import: the memopt subsystem owns state-dtype names/literals
+        # (grep contract) and itself builds on this module's protocol.
+        from repro.memopt.state_quant import scale_by_adam_state_dtype
+
+        parts.append(scale_by_adam_state_dtype(
+            b1=b1, b2=b2, eps=eps, state_dtype=state_dtype))
+    else:
+        parts.append(scale_by_adam(b1=b1, b2=b2, eps=eps,
+                                   moment_dtype=moment_dtype))
     if weight_decay:
         parts.append(add_decayed_weights(weight_decay, weight_decay_scales))
     parts.append(scale_by_schedule(lambda step: -schedule(step)))

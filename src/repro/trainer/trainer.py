@@ -169,6 +169,7 @@ class SpmdTrainer(Module):
         # / tracer / profiler across warm restarts on this instance).
         self.observability = build_observability(cfg.observability)
         self._step_cost = None
+        self._opt_state_bytes = None
         self._mem_stats_unavailable = False
         self._lower_shapes = None
         # Set by a SIGTERM handler (see launch/train.py) or the supervisor's
@@ -507,6 +508,24 @@ class SpmdTrainer(Module):
                 shardings = self.state_shardings(state_shapes, mesh)
                 state = jax.device_put(state, shardings)
 
+                # Exact optimizer-state footprint (repro.memopt.accounting),
+                # computed on shapes (no device transfer): the lever the
+                # memory-frugal knobs (factored/quantized state, ZeRO-1)
+                # move, exported as gauges and in the run result.
+                from repro.memopt import accounting
+
+                self._opt_state_bytes = accounting.state_bytes(
+                    state_shapes["opt_state"])
+                opt_bytes_per_device = accounting.per_device_state_bytes(
+                    state_shapes["opt_state"], shardings["opt_state"])
+                if registry is not None:
+                    registry.gauge("train/opt_state_bytes").set(
+                        self._opt_state_bytes)
+                    if opt_bytes_per_device is not None:
+                        registry.gauge(
+                            "train/opt_state_bytes_per_device").set(
+                                opt_bytes_per_device)
+
                 sample = self.input.make_batch(0)
                 batch_sh = self.batch_shardings(sample, mesh)
                 self._lower_shapes = (state_shapes, {
@@ -656,6 +675,7 @@ class SpmdTrainer(Module):
                 obs.save_trace()  # include the final-wait span
             return {"state": state, "history": history, "final": last_metrics,
                     "num_params": tree_param_count(state["params"]),
+                    "opt_state_bytes": self._opt_state_bytes,
                     "input_state": it.state() if hasattr(it, "state") else None,
                     "goodput": monitor.summary(),
                     "goodput_events": monitor.events,

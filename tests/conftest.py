@@ -7,6 +7,12 @@ each such test runs under a SIGALRM watchdog (default 300 s, override with
 ``@pytest.mark.multiprocess(timeout=N)``) that fails the test instead of
 hanging it. Deselect them with ``-m "not multiprocess"`` for a fast pass.
 
+``@pytest.mark.heavy`` is the tier-1 runtime guard for expensive in-suite
+tests (forced multi-device subprocess shardings, long compiles): the same
+SIGALRM watchdog with a 240 s default, plus an opt-out — set
+``REPRO_SKIP_HEAVY=1`` (or deselect with ``-m "not heavy"``) to skip them
+when iterating locally.
+
 Hypothesis: some environments (including the CI container) don't ship
 ``hypothesis``; the property tests then degraded to hard collection errors
 for whole test modules. When the real library is importable we use it
@@ -17,6 +23,7 @@ untouched; otherwise we install a tiny deterministic stand-in into
 exercised everywhere.
 """
 
+import os
 import random
 import signal
 import sys
@@ -27,22 +34,37 @@ import pytest
 _MULTIPROCESS_DEFAULT_TIMEOUT_S = 300
 
 
+_HEAVY_DEFAULT_TIMEOUT_S = 240
+
+
 def pytest_configure(config):
     config.addinivalue_line(
         "markers",
         "multiprocess(timeout=300): test spawns worker subprocesses; runs "
         "under a SIGALRM watchdog so a dead collective fails instead of "
         "hanging the suite")
+    config.addinivalue_line(
+        "markers",
+        "heavy(timeout=240): tier-1 runtime guard for expensive in-suite "
+        "tests (forced multi-device subprocesses, long compiles); runs "
+        "under a SIGALRM watchdog and is skipped when REPRO_SKIP_HEAVY "
+        "is set")
 
 
 @pytest.fixture(autouse=True)
 def _multiprocess_watchdog(request):
     marker = request.node.get_closest_marker("multiprocess")
+    if marker is None:
+        marker = request.node.get_closest_marker("heavy")
+        if marker is not None and os.environ.get("REPRO_SKIP_HEAVY"):
+            pytest.skip("REPRO_SKIP_HEAVY set: skipping heavy tier-1 test")
+        default_timeout = _HEAVY_DEFAULT_TIMEOUT_S
+    else:
+        default_timeout = _MULTIPROCESS_DEFAULT_TIMEOUT_S
     if marker is None or not hasattr(signal, "SIGALRM"):
         yield
         return
-    timeout = int(marker.kwargs.get("timeout",
-                                    _MULTIPROCESS_DEFAULT_TIMEOUT_S))
+    timeout = int(marker.kwargs.get("timeout", default_timeout))
 
     def on_alarm(signum, frame):
         pytest.fail(f"multiprocess test exceeded {timeout}s watchdog "
